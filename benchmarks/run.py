@@ -1,0 +1,73 @@
+"""Benchmark harness: one entry per paper table/figure plus system
+microbenches.  Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig6       # one artifact
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from benchmarks.paper_tables import ALL
+
+
+def _microbench():
+    """CPU-timeable system microbenches (reduced configs)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.models import transformer as tmod
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for arch_id in ("phi4-mini-3.8b", "qwen2-moe-a2.7b", "xlstm-125m"):
+        cfg = get_arch(arch_id).reduced()
+        params = tmod.init_params(key, cfg)
+        tk = jax.random.randint(key, (2, 32), 0, cfg.vocab_size)
+        batch = {"tokens": tk, "labels": jnp.roll(tk, -1, 1)}
+        f = jax.jit(lambda p, b: tmod.loss_fn(p, cfg, b, remat=False))
+        f(params, batch).block_until_ready()
+        t0 = time.perf_counter()
+        n = 5
+        for _ in range(n):
+            f(params, batch).block_until_ready()
+        us = (time.perf_counter() - t0) / n * 1e6
+        rows.append({"name": f"micro/loss/{arch_id}", "us_per_call": round(us)})
+
+        _, cache = tmod.prefill(params, cfg, batch, max_seq=40)
+        tok = jnp.ones((2, 1), jnp.int32)
+        g = jax.jit(lambda p, c, t: tmod.decode_step(p, cfg, c, t,
+                                                     jnp.int32(32)))
+        g(params, cache, tok)[0].block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(n):
+            g(params, cache, tok)[0].block_until_ready()
+        us = (time.perf_counter() - t0) / n * 1e6
+        rows.append({"name": f"micro/decode/{arch_id}",
+                     "us_per_call": round(us)})
+    return rows
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL) + ["micro"]
+    print("name,us_per_call,derived")
+    for key in which:
+        if key == "micro":
+            for row in _microbench():
+                name = row.pop("name")
+                us = row.pop("us_per_call", "")
+                print(f"{name},{us},{json.dumps(row)}")
+            continue
+        fn = ALL[key]
+        t0 = time.perf_counter()
+        rows = fn()
+        us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+        for row in rows:
+            name = row.pop("name")
+            print(f"{name},{us:.0f},{json.dumps(row, default=str)}")
+
+
+if __name__ == "__main__":
+    main()

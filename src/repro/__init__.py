@@ -1,0 +1,6 @@
+"""H2PIPE-JAX: hybrid-memory layer-pipelined dataflow framework.
+
+Reproduction of "H2PIPE: High Throughput CNN Inference on FPGAs with
+High-Bandwidth Memory" (FPL 2024), adapted to the TPU memory hierarchy,
+plus a production LM training/serving substrate.  See README.md.
+"""

@@ -1,0 +1,278 @@
+"""The paper's own CNNs as per-layer descriptors.
+
+H2PIPE's compiler reasons about a CNN layer-by-layer: kernel shape, channel
+counts and output spatial size determine weight memory (Table I), weight
+traffic per image (Eq. 2) and the HBM-offload score (Eq. 1).  We reproduce
+that representation exactly; the same descriptors drive the JAX model
+builders in ``repro.models.cnn``.
+
+All networks use 224x224x3 ImageNet inputs and int8 weights (the paper's
+precision), with HPIPE conventions:
+  * activations buffered on chip as a sliding window of ``k_h`` lines
+    (+1 line being written) per layer input,
+  * weights re-read once per output row when streamed from HBM (Eq. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ConvLayerSpec:
+    """One convolutional (or fc-as-conv) layer as H2PIPE sees it."""
+
+    name: str
+    kind: str                 # conv | dwconv | pwconv | fc
+    k_h: int
+    k_w: int
+    c_in: int
+    c_out: int
+    stride: int
+    in_h: int
+    in_w: int
+
+    @property
+    def out_h(self) -> int:
+        return max(1, self.in_h // self.stride)
+
+    @property
+    def out_w(self) -> int:
+        return max(1, self.in_w // self.stride)
+
+    @property
+    def weight_count(self) -> int:
+        if self.kind == "dwconv":
+            return self.k_h * self.k_w * self.c_in
+        return self.k_h * self.k_w * self.c_in * self.c_out
+
+    def weight_bits(self, bits: int = 8) -> int:
+        return self.weight_count * bits
+
+    @property
+    def macs(self) -> int:
+        """Multiply-accumulates for one image."""
+        if self.kind == "dwconv":
+            return self.k_h * self.k_w * self.c_in * self.out_h * self.out_w
+        return (self.k_h * self.k_w * self.c_in * self.c_out
+                * self.out_h * self.out_w)
+
+    def weight_traffic_bytes(self, bits: int = 8) -> int:
+        """Eq. 2 term: kernels are re-read once per output line."""
+        return self.weight_bits(bits) // 8 * self.out_h
+
+    def activation_window_bits(self, bits: int = 8) -> int:
+        """On-chip activation line buffer: k_h input lines + 1 in flight,
+        double-buffered (HPIPE duplicates activation buffers for Fmax)."""
+        lines = self.k_h + 1
+        return self.in_w * self.c_in * lines * bits * 2
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    layers: Tuple[ConvLayerSpec, ...]
+    num_classes: int = 1000
+
+    def total_weight_bits(self, bits: int = 8) -> int:
+        return sum(l.weight_bits(bits) for l in self.layers)
+
+    def total_activation_bits(self, bits: int = 8) -> int:
+        return sum(l.activation_window_bits(bits) for l in self.layers)
+
+    def total_weight_traffic(self, bits: int = 8) -> int:
+        return sum(l.weight_traffic_bytes(bits) for l in self.layers)
+
+    def total_macs(self) -> int:
+        return sum(l.macs for l in self.layers)
+
+    def reduced(self) -> "CNNConfig":
+        """Tiny CIFAR-scale variant for smoke tests: keep the topology family,
+        shrink depth/channels."""
+        keep = [l for i, l in enumerate(self.layers) if i < 4 or l.kind == "fc"]
+        small = []
+        h, w = 32, 32
+        for l in keep:
+            c_in = 3 if not small else small[-1].c_out
+            c_out = min(l.c_out, 16)
+            if l.kind == "dwconv":
+                c_out = c_in
+            stride = l.stride
+            k_h, k_w = l.k_h, l.k_w
+            if l.kind == "fc":          # fc-as-conv runs on the pooled 1x1 map
+                k_h = k_w = stride = 1
+                h = w = 1
+            small.append(dataclasses.replace(
+                l, c_in=c_in, c_out=c_out, in_h=h, in_w=w,
+                k_h=k_h, k_w=k_w, stride=stride))
+            h, w = max(1, h // stride), max(1, w // stride)
+        return CNNConfig(self.name + "-reduced", tuple(small), num_classes=10)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def _vgg16() -> CNNConfig:
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+           512, 512, 512, "M", 512, 512, 512, "M"]
+    layers: List[ConvLayerSpec] = []
+    h = w = 224
+    c_in = 3
+    i = 0
+    for v in cfg:
+        if v == "M":
+            h //= 2
+            w //= 2
+            continue
+        layers.append(ConvLayerSpec(f"conv{i}", "conv", 3, 3, c_in, v, 1, h, w))
+        c_in = v
+        i += 1
+    # fc layers as 1x1 convs on the pooled feature map (HPIPE style)
+    layers.append(ConvLayerSpec("fc0", "fc", 7, 7, 512, 4096, 7, 7, 7))
+    layers.append(ConvLayerSpec("fc1", "fc", 1, 1, 4096, 4096, 1, 1, 1))
+    layers.append(ConvLayerSpec("fc2", "fc", 1, 1, 4096, 1000, 1, 1, 1))
+    return CNNConfig("vgg16", tuple(layers))
+
+
+def _resnet(depth: int) -> CNNConfig:
+    """ResNet-18 (basic blocks) or ResNet-50 (bottleneck blocks)."""
+    layers: List[ConvLayerSpec] = []
+    layers.append(ConvLayerSpec("stem", "conv", 7, 7, 3, 64, 2, 224, 224))
+    h = w = 56   # after stem stride-2 and 3x3 maxpool stride-2
+
+    if depth == 18:
+        stages = [(64, 2), (128, 2), (256, 2), (512, 2)]
+        c_in = 64
+        for si, (c, blocks) in enumerate(stages):
+            for b in range(blocks):
+                stride = 2 if (si > 0 and b == 0) else 1
+                if stride == 2:
+                    h //= 2
+                    w //= 2
+                layers.append(ConvLayerSpec(
+                    f"s{si}b{b}c0", "conv", 3, 3, c_in, c, stride,
+                    h * stride, w * stride))
+                layers.append(ConvLayerSpec(
+                    f"s{si}b{b}c1", "conv", 3, 3, c, c, 1, h, w))
+                if stride == 2 or c_in != c:
+                    layers.append(ConvLayerSpec(
+                        f"s{si}b{b}ds", "pwconv", 1, 1, c_in, c, stride,
+                        h * stride, w * stride))
+                c_in = c
+        layers.append(ConvLayerSpec("fc", "fc", 1, 1, 512, 1000, 1, 1, 1))
+        return CNNConfig("resnet18", tuple(layers))
+
+    if depth == 50:
+        stages = [(64, 256, 3), (128, 512, 4), (256, 1024, 6), (512, 2048, 3)]
+        c_in = 64
+        for si, (mid, out, blocks) in enumerate(stages):
+            for b in range(blocks):
+                stride = 2 if (si > 0 and b == 0) else 1
+                if stride == 2:
+                    h //= 2
+                    w //= 2
+                layers.append(ConvLayerSpec(
+                    f"s{si}b{b}c0", "pwconv", 1, 1, c_in, mid, 1,
+                    h * stride, w * stride))
+                layers.append(ConvLayerSpec(
+                    f"s{si}b{b}c1", "conv", 3, 3, mid, mid, stride,
+                    h * stride, w * stride))
+                layers.append(ConvLayerSpec(
+                    f"s{si}b{b}c2", "pwconv", 1, 1, mid, out, 1, h, w))
+                if b == 0:
+                    layers.append(ConvLayerSpec(
+                        f"s{si}b{b}ds", "pwconv", 1, 1, c_in, out, stride,
+                        h * stride, w * stride))
+                c_in = out
+        layers.append(ConvLayerSpec("fc", "fc", 1, 1, 2048, 1000, 1, 1, 1))
+        return CNNConfig("resnet50", tuple(layers))
+
+    raise ValueError(f"unsupported resnet depth {depth}")
+
+
+def _mobilenet_v1() -> CNNConfig:
+    layers: List[ConvLayerSpec] = []
+    layers.append(ConvLayerSpec("stem", "conv", 3, 3, 3, 32, 2, 224, 224))
+    h = w = 112
+    c_in = 32
+    plan = [(64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2),
+            (512, 1), (512, 1), (512, 1), (512, 1), (512, 1), (1024, 2),
+            (1024, 1)]
+    for i, (c, s) in enumerate(plan):
+        layers.append(ConvLayerSpec(f"dw{i}", "dwconv", 3, 3, c_in, c_in, s, h, w))
+        h, w = h // s, w // s
+        layers.append(ConvLayerSpec(f"pw{i}", "pwconv", 1, 1, c_in, c, 1, h, w))
+        c_in = c
+    layers.append(ConvLayerSpec("fc", "fc", 1, 1, 1024, 1000, 1, 1, 1))
+    return CNNConfig("mobilenetv1", tuple(layers))
+
+
+def _mobilenet_v2() -> CNNConfig:
+    layers: List[ConvLayerSpec] = []
+    layers.append(ConvLayerSpec("stem", "conv", 3, 3, 3, 32, 2, 224, 224))
+    h = w = 112
+    c_in = 32
+    # (expansion, c_out, n, stride)
+    plan = [(1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+            (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+    i = 0
+    for t, c, n, s in plan:
+        for b in range(n):
+            stride = s if b == 0 else 1
+            mid = c_in * t
+            if t != 1:
+                layers.append(ConvLayerSpec(
+                    f"ir{i}ex", "pwconv", 1, 1, c_in, mid, 1, h, w))
+            layers.append(ConvLayerSpec(
+                f"ir{i}dw", "dwconv", 3, 3, mid, mid, stride, h, w))
+            h, w = h // stride, w // stride
+            layers.append(ConvLayerSpec(
+                f"ir{i}pj", "pwconv", 1, 1, mid, c, 1, h, w))
+            c_in = c
+            i += 1
+    layers.append(ConvLayerSpec("head", "pwconv", 1, 1, 320, 1280, 1, 7, 7))
+    layers.append(ConvLayerSpec("fc", "fc", 1, 1, 1280, 1000, 1, 1, 1))
+    return CNNConfig("mobilenetv2", tuple(layers))
+
+
+def _mobilenet_v3() -> CNNConfig:
+    """MobileNetV3-Large (SE layers counted as pointwise convs)."""
+    layers: List[ConvLayerSpec] = []
+    layers.append(ConvLayerSpec("stem", "conv", 3, 3, 3, 16, 2, 224, 224))
+    h = w = 112
+    c_in = 16
+    # (k, exp, c_out, stride)
+    plan = [(3, 16, 16, 1), (3, 64, 24, 2), (3, 72, 24, 1), (5, 72, 40, 2),
+            (5, 120, 40, 1), (5, 120, 40, 1), (3, 240, 80, 2), (3, 200, 80, 1),
+            (3, 184, 80, 1), (3, 184, 80, 1), (3, 480, 112, 1),
+            (3, 672, 112, 1), (5, 672, 160, 2), (5, 960, 160, 1),
+            (5, 960, 160, 1)]
+    for i, (k, exp, c, s) in enumerate(plan):
+        if exp != c_in:
+            layers.append(ConvLayerSpec(
+                f"b{i}ex", "pwconv", 1, 1, c_in, exp, 1, h, w))
+        layers.append(ConvLayerSpec(f"b{i}dw", "dwconv", k, k, exp, exp, s, h, w))
+        h, w = h // s, w // s
+        layers.append(ConvLayerSpec(f"b{i}pj", "pwconv", 1, 1, exp, c, 1, h, w))
+        c_in = c
+    layers.append(ConvLayerSpec("head0", "pwconv", 1, 1, 160, 960, 1, 7, 7))
+    layers.append(ConvLayerSpec("head1", "fc", 1, 1, 960, 1280, 1, 1, 1))
+    layers.append(ConvLayerSpec("fc", "fc", 1, 1, 1280, 1000, 1, 1, 1))
+    return CNNConfig("mobilenetv3", tuple(layers))
+
+
+CNN_CONFIGS = {
+    "resnet18": _resnet(18),
+    "resnet50": _resnet(50),
+    "vgg16": _vgg16(),
+    "mobilenetv1": _mobilenet_v1(),
+    "mobilenetv2": _mobilenet_v2(),
+    "mobilenetv3": _mobilenet_v3(),
+}
+
+
+def get_cnn(name: str) -> CNNConfig:
+    return CNN_CONFIGS[name]

@@ -1,0 +1,198 @@
+"""Discrete-event simulation of the H2PIPE weight-distribution network.
+
+Reproduces the paper's §V-A result: when several layer engines share one
+HBM-to-fabric DCFIFO, a ready/valid latency-insensitive protocol can
+head-of-line block and deadlock (Fig. 5), while credit-based flow control
+cannot.  The simulator models:
+
+  HBM controller -> shared DCFIFO -> per-layer burst-matching FIFOs
+      -> layer engines, with activation FIFOs between consecutive layers.
+
+A layer engine consumes one activation from its upstream FIFO plus
+``weights_per_act`` weight words to emit one activation downstream.  The
+weight prefetcher round-robins burst reads over the layers sharing the
+pseudo-channel; deliveries arrive in request order after ``hbm_latency``
+cycles (the deterministic abstraction of Fig. 3b).
+
+Modes
+-----
+``ready_valid``  the DCFIFO head transfers only if the destination
+                 burst-matching FIFO has space; otherwise it blocks ALL
+                 layers behind it (head-of-line blocking).
+``credit``       the prefetcher holds per-layer credit counters sized to the
+                 burst-matching FIFO and issues a read only when the whole
+                 burst is guaranteed space — the DCFIFO can always drain.
+
+The same credit semantics guard the multi-stage pipeline executor in
+``core/dataflow.py``; the property tests in tests/test_fifo_sim.py check
+both the deadlock repro and credit-mode liveness over random topologies.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+@dataclass
+class SimConfig:
+    n_layers: int = 3
+    burst: int = 4                    # words per HBM read
+    bm_fifo_depth: int = 8            # per-layer burst-matching FIFO (words)
+    act_fifo_depth: int = 2           # inter-layer activation FIFO
+    dcfifo_depth: int = 16            # shared HBM->fabric DCFIFO
+    hbm_latency: int = 12             # cycles request -> first word
+    weights_per_act: Tuple[int, ...] = (1, 1, 1)
+    outputs_needed: int = 64          # activations layer N-1 must emit
+    deadlock_window: int = 2000       # no-progress cycles -> deadlocked
+
+
+@dataclass
+class SimOutcome:
+    completed: bool
+    deadlocked: bool
+    cycles: int
+    outputs: int
+    stall_cycles: int                 # cycles the tail engine was frozen
+    per_layer_weight_words: List[int] = field(default_factory=list)
+
+
+def simulate(cfg: SimConfig, mode: str = "credit",
+             start_skew: Optional[List[int]] = None) -> SimOutcome:
+    """Run the network until the last layer emits ``outputs_needed``
+    activations, deadlock is detected, or a hard cycle cap is hit.
+
+    ``start_skew``: cycle at which each layer engine powers on (the paper's
+    start-up scenario: the first layer operating while consecutive layers
+    still wait on activations)."""
+    assert mode in ("ready_valid", "credit")
+    L = cfg.n_layers
+    wpa = list(cfg.weights_per_act)
+    assert len(wpa) == L
+    start_skew = start_skew or [0] * L
+
+    # state
+    dcfifo: Deque[int] = deque()                  # words tagged by layer id
+    inflight: Deque[Tuple[int, int]] = deque()    # (deliver_cycle, layer)
+    bm: List[Deque[int]] = [deque() for _ in range(L)]
+    acts: List[Deque[int]] = [deque() for _ in range(L + 1)]
+    credits = [cfg.bm_fifo_depth for _ in range(L)]
+    weight_need = [wpa[i] for i in range(L)]      # remaining for current act
+    got_words = [0] * L
+    outputs = 0
+    stall = 0
+    rr = 0                                        # round-robin pointer
+    last_progress = 0
+    cycle = 0
+    CAP = 500_000
+
+    # total weight words each layer will ever need (stop prefetching after)
+    total_need = [wpa[i] * cfg.outputs_needed for i in range(L)]
+    issued = [0] * L
+
+    while outputs < cfg.outputs_needed and cycle < CAP:
+        cycle += 1
+        progressed = False
+
+        # 1. deliver arrived HBM words into the DCFIFO (in request order)
+        while inflight and inflight[0][0] <= cycle and \
+                len(dcfifo) < cfg.dcfifo_depth:
+            _, lid = inflight.popleft()
+            dcfifo.append(lid)
+            progressed = True
+
+        # 2. prefetcher issues one burst per cycle at most
+        for probe in range(L):
+            lid = (rr + probe) % L
+            if issued[lid] >= total_need[lid]:
+                continue
+            n = min(cfg.burst, total_need[lid] - issued[lid])
+            if mode == "credit":
+                if credits[lid] < n:
+                    continue
+                credits[lid] -= n
+            else:
+                if len(inflight) + len(dcfifo) + n > cfg.dcfifo_depth:
+                    continue
+            for w in range(n):
+                inflight.append((cycle + cfg.hbm_latency + w, lid))
+            issued[lid] += n
+            rr = (lid + 1) % L
+            break
+
+        # 3. DCFIFO head -> burst-matching FIFO (head-of-line semantics)
+        while dcfifo:
+            head = dcfifo[0]
+            if len(bm[head]) < cfg.bm_fifo_depth:
+                bm[head].append(dcfifo.popleft())
+                progressed = True
+            else:
+                break                              # HoL block (ready/valid)
+                # (credit mode never hits this: space was reserved)
+
+        # 4. layer engines (last to first so same-cycle hand-off works)
+        for lid in reversed(range(L)):
+            if cycle < start_skew[lid]:
+                continue
+            src_ok = (lid == 0) or bool(acts[lid])
+            dst_ok = len(acts[lid + 1]) < cfg.act_fifo_depth or lid == L - 1
+            if not (src_ok and dst_ok):
+                if lid == L - 1:
+                    stall += 1
+                continue
+            if weight_need[lid] > 0:
+                if bm[lid]:
+                    bm[lid].popleft()
+                    got_words[lid] += 1
+                    weight_need[lid] -= 1
+                    if mode == "credit":
+                        credits[lid] += 1
+                    progressed = True
+                else:
+                    if lid == L - 1:
+                        stall += 1
+                    continue
+            if weight_need[lid] == 0:
+                weight_need[lid] = wpa[lid]
+                if lid > 0:
+                    acts[lid].popleft()
+                if lid == L - 1:
+                    outputs += 1
+                else:
+                    acts[lid + 1].append(1)
+                progressed = True
+
+        if progressed:
+            last_progress = cycle
+        elif cycle - last_progress > cfg.deadlock_window:
+            return SimOutcome(False, True, cycle, outputs, stall, got_words)
+
+    return SimOutcome(outputs >= cfg.outputs_needed, False, cycle, outputs,
+                      stall, got_words)
+
+
+def fig5_scenario() -> SimConfig:
+    """The paper's deadlock setup: three consecutive layers share one
+    DCFIFO; the downstream layer's burst-matching FIFO fills while it waits
+    on activations that can only come from the upstream layer — whose
+    weights are stuck behind the head of the DCFIFO."""
+    return SimConfig(
+        n_layers=3,
+        burst=4,
+        bm_fifo_depth=4,
+        act_fifo_depth=1,
+        dcfifo_depth=8,
+        hbm_latency=6,
+        weights_per_act=(8, 1, 1),     # layer 0 is weight-hungry
+        outputs_needed=32,
+    )
+
+
+def demo() -> Dict[str, SimOutcome]:
+    """Run the Fig. 5 scenario both ways (used by tests and benchmarks)."""
+    cfg = fig5_scenario()
+    skew = [0, 40, 80]                # §V-A start-up skew
+    return {
+        "ready_valid": simulate(cfg, "ready_valid", start_skew=skew),
+        "credit": simulate(cfg, "credit", start_skew=skew),
+    }

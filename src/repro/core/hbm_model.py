@@ -1,0 +1,222 @@
+"""HBM efficiency / latency model — the paper's §III-A characterization.
+
+The paper measures an HBM2 pseudo-channel on Stratix 10 NX under the
+accelerator's own address pattern (interleaved, non-sequential reads from
+several consumers): read/write efficiency as a function of burst length
+(Fig. 3a) and *saturated* read latency (Fig. 3b).  We encode those curves as
+a calibrated analytic model plus a cycle-level traffic simulator so every
+downstream artifact (FIFO sizing, Alg. 1 budgets, Table II, Fig. 6) derives
+from the same characterization, exactly as in the paper.
+
+Hardware constants (Stratix 10 NX2100, -2 speed grade, §II-C):
+  * 2 stacks x 16 pseudo-channels, 256-bit controller interface @ 400 MHz
+  * 204.8 GB/s per stack -> 409.6 GB/s total raw
+  * fabric (layer-engine) clock: 300 MHz
+
+The TPU-v5e analogues used by the LM side of the framework live in
+``repro.roofline.hw`` — this module is deliberately kept in the paper's own
+units so the reproduction is checkable against the paper's numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# constants (paper values)
+# ---------------------------------------------------------------------------
+
+N_STACKS = 2
+PCS_PER_STACK = 16
+N_PCS = N_STACKS * PCS_PER_STACK                 # 32
+PC_IF_BITS = 256                                 # controller word
+PC_IF_MHZ = 400.0                                # controller clock
+FABRIC_MHZ = 300.0                               # layer-engine clock
+PC_BW_BYTES = PC_IF_BITS / 8 * PC_IF_MHZ * 1e6   # 12.8 GB/s per PC
+STACK_BW_BYTES = PC_BW_BYTES * PCS_PER_STACK     # 204.8 GB/s
+TOTAL_BW_BYTES = STACK_BW_BYTES * N_STACKS       # 409.6 GB/s
+
+# §VI-B effective bandwidth: 31 of 32 PCs usable (PC16 timing closure),
+# 240 of 256 bits consumed (80-bit tensor-chain granularity), fabric clock.
+USABLE_PCS = 31
+USABLE_BITS = 240
+EFFECTIVE_BW_BYTES = USABLE_PCS * USABLE_BITS / 8 * FABRIC_MHZ * 1e6  # 279 GB/s
+
+# Fig. 3a measured read efficiency at saturation, random/interleaved pattern.
+# Keys are burst lengths (controller words per request).
+READ_EFFICIENCY: Dict[int, float] = {
+    1: 0.44, 2: 0.46, 4: 0.49, 8: 0.83, 16: 0.89, 32: 0.93,
+}
+# Write efficiency peaks ~15 points below read (§III-A).
+WRITE_EFFICIENCY: Dict[int, float] = {
+    1: 0.40, 2: 0.42, 4: 0.45, 8: 0.68, 16: 0.74, 32: 0.78,
+}
+# Fig. 3b saturated read latency (ns): (min, avg, max) per burst length.
+READ_LATENCY_NS: Dict[int, Tuple[float, float, float]] = {
+    4: (180.0, 680.0, 1950.0),
+    8: (180.0, 560.0, 1214.0),
+    16: (180.0, 470.0, 1100.0),
+    32: (180.0, 400.0, 1000.0),
+}
+IDLE_LATENCY_NS = 450.0          # unsaturated / sequential, any burst length
+
+
+def _interp(table: Dict[int, float], burst: int) -> float:
+    keys = sorted(table)
+    if burst <= keys[0]:
+        return table[keys[0]]
+    if burst >= keys[-1]:
+        return table[keys[-1]]
+    for lo, hi in zip(keys, keys[1:]):
+        if lo <= burst <= hi:
+            f = (burst - lo) / (hi - lo)
+            return table[lo] * (1 - f) + table[hi] * f
+    raise AssertionError
+
+
+def read_efficiency(burst: int) -> float:
+    """Fraction of controller cycles that accept a read at saturation."""
+    return _interp(READ_EFFICIENCY, burst)
+
+
+def write_efficiency(burst: int) -> float:
+    return _interp(WRITE_EFFICIENCY, burst)
+
+
+def read_latency_ns(burst: int, which: str = "avg") -> float:
+    idx = {"min": 0, "avg": 1, "max": 2}[which]
+    keys = sorted(READ_LATENCY_NS)
+    b = min(keys, key=lambda k: abs(k - max(burst, keys[0])))
+    if burst <= 2:
+        b = 4
+    return READ_LATENCY_NS[b][idx]
+
+
+def pc_effective_read_bw(burst: int) -> float:
+    """Bytes/s one pseudo-channel sustains for the interleaved read pattern."""
+    return PC_BW_BYTES * read_efficiency(burst)
+
+
+# ---------------------------------------------------------------------------
+# FIFO sizing (§III-B / §IV-A)
+# ---------------------------------------------------------------------------
+
+
+def min_laststage_fifo_depth(burst: int = 8,
+                             fabric_mhz: float = FABRIC_MHZ) -> int:
+    """Words needed to keep a tensor chain fed across the worst-case
+    saturated read latency.  Paper: 1214 ns @ 300 MHz -> 364 cycles ->
+    512-deep FIFOs (next power of two)."""
+    worst_ns = read_latency_ns(burst, "max")
+    cycles = int(worst_ns * fabric_mhz / 1e3) + 1
+    depth = 1
+    while depth < cycles:
+        depth *= 2
+    return depth
+
+
+def burst_matching_fifo_words(burst: int) -> int:
+    """Burst-matching SCFIFO depth grows proportionally to burst length
+    (§IV-A): hold 2 bursts (ping/pong) of 256-bit words."""
+    return 2 * burst
+
+
+def fifo_m20k_cost(burst: int) -> int:
+    """On-chip RAM cost (M20K blocks) of one layer's HBM plumbing: the
+    512x80b last-stage FIFO costs 2 M20Ks (512x40 mode); burst-matching
+    adds ceil(words*256b / 20kb)."""
+    last_stage = 2
+    bm_bits = burst_matching_fifo_words(burst) * 256
+    return last_stage + -(-bm_bits // 20480)
+
+
+# ---------------------------------------------------------------------------
+# cycle-level pseudo-channel traffic simulator
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReadRequest:
+    consumer: int          # which layer engine / tensor-chain group
+    burst: int             # controller words
+    issue_cycle: int
+
+
+@dataclass
+class SimResult:
+    cycles: int
+    accepted: int                 # transactions accepted
+    words_delivered: int
+    efficiency: float             # accepted-cycles / total-cycles
+    mean_latency_cycles: float
+    max_latency_cycles: float
+    per_consumer_words: Dict[int, int]
+
+
+def simulate_pc(requests: Sequence[ReadRequest], burst: int,
+                seed: int = 0) -> SimResult:
+    """Simulate one pseudo-channel controller servicing an interleaved
+    read stream at saturation.
+
+    The controller accepts one request per cycle with probability
+    eff(burst) (bank conflicts / refresh are folded into the acceptance
+    process, as the paper's measured efficiency does); data is returned
+    ``latency`` cycles later over ``burst`` consecutive cycles.  A simple
+    LCG supplies deterministic pseudo-randomness.
+    """
+    eff = read_efficiency(burst)
+    lat_cyc = int(read_latency_ns(burst, "avg") * PC_IF_MHZ / 1e3)
+    jitter = int((read_latency_ns(burst, "max")
+                  - read_latency_ns(burst, "avg")) * PC_IF_MHZ / 1e3)
+    state = (seed * 6364136223846793005 + 1442695040888963407) % 2**64
+    accepted = 0
+    words = 0
+    latencies: List[int] = []
+    per_consumer: Dict[int, int] = {}
+    cycle = 0
+    queue = list(requests)
+    while queue:
+        req = queue[0]
+        cycle = max(cycle + 1, req.issue_cycle)
+        # the data bus moves one 256-bit word per cycle with probability
+        # eff(burst) — bank conflicts/refresh folded into the acceptance
+        # process, so sustained words/cycle == the measured curve
+        state = (state * 6364136223846793005 + 1442695040888963407) % 2**64
+        u = (state >> 33) / 2**31
+        if u < eff:
+            words += 1
+            per_consumer[req.consumer] = \
+                per_consumer.get(req.consumer, 0) + 1
+            # a request completes after its burst-th word
+            if not hasattr(req, "_served"):
+                req._served = 0
+            req._served += 1
+            if req._served >= req.burst:
+                queue.pop(0)
+                accepted += 1
+                state = (state * 6364136223846793005
+                         + 1442695040888963407) % 2**64
+                extra = int(((state >> 33) / 2**31) * jitter)
+                latencies.append(lat_cyc + extra + req.burst)
+    total_cycles = max(cycle, 1)
+    return SimResult(
+        cycles=total_cycles,
+        accepted=accepted,
+        words_delivered=words,
+        efficiency=words / total_cycles,
+        mean_latency_cycles=(sum(latencies) / len(latencies)) if latencies else 0,
+        max_latency_cycles=max(latencies) if latencies else 0,
+        per_consumer_words=per_consumer,
+    )
+
+
+def interleaved_stream(n_consumers: int, bursts_per_consumer: int,
+                       burst: int) -> List[ReadRequest]:
+    """The paper's §III-B pattern: several tensor-chain groups round-robin
+    their read addresses over one pseudo-channel (non-sequential)."""
+    reqs = []
+    for i in range(bursts_per_consumer):
+        for c in range(n_consumers):
+            reqs.append(ReadRequest(consumer=c, burst=burst, issue_cycle=0))
+    return reqs

@@ -1,0 +1,86 @@
+"""int8 conv2d — the HPIPE layer engine as a Pallas TPU kernel.
+
+HPIPE computes a convolution row-by-row: a line buffer holds the k_h input
+rows under the kernel's receptive field, the engine sweeps the full
+activation width per cycle group, and weights are broadcast to the tensor
+chains.  The TPU mapping (DESIGN.md §2):
+
+  line buffer (k_h rows)   -> VMEM scratch of k_h padded input rows,
+                              refilled by an explicit DMA per output row
+                              (the sliding window never holds more than
+                              k_h rows — activations stay in the fast tier)
+  full-width parallelism   -> each grid step computes one whole output row;
+                              the W_out dim rides the MXU/VPU lanes
+  weight broadcast         -> the [k_h*k_w*C, C_out] weight matrix stays in
+                              VMEM across the row sweep (pinned tier) —
+                              streaming weights belongs to stream_matmul
+  int8 x int8 -> int32     -> jnp.dot with preferred_element_type=int32
+                              (the AI-TB dot chains)
+
+Grid: (B, H_out).  Input is pre-padded in the ops wrapper so the kernel has
+no boundary conditionals (stride handled by strided static slices).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(x_hbm_ref, w_ref, o_ref, rows_buf, sem, *,
+                 k_h: int, k_w: int, stride: int, w_out: int):
+    b = pl.program_id(0)
+    r = pl.program_id(1)
+
+    # line buffer refill: DMA the k_h input rows for this output row
+    pltpu.make_async_copy(
+        x_hbm_ref.at[b, pl.ds(r * stride, k_h)], rows_buf, sem).start()
+    pltpu.make_async_copy(
+        x_hbm_ref.at[b, pl.ds(r * stride, k_h)], rows_buf, sem).wait()
+
+    c_in = rows_buf.shape[-1]
+    acc = jnp.zeros((w_out, o_ref.shape[-1]), jnp.int32)
+    for i in range(k_h):
+        for j in range(k_w):
+            # strided width slice: columns j, j+s, ..., j+(w_out-1)s
+            cols = jax.lax.slice(
+                rows_buf[i], (j, 0), (j + (w_out - 1) * stride + 1, c_in),
+                (stride, 1))                                  # [w_out, C]
+            wij = w_ref[i, j]                                 # [C, C_out]
+            acc = acc + jnp.dot(cols, wij,
+                                preferred_element_type=jnp.int32)
+    o_ref[0, 0] = acc
+
+
+def conv2d_int8_kernel(x_padded, w, *, stride: int = 1,
+                       interpret: bool = False):
+    """x_padded: [B, H_pad, W_pad, C] int8 (already SAME-padded);
+    w: [k_h, k_w, C, C_out] int8.  Returns [B, H_out, W_out, C_out] int32.
+    """
+    B, H_pad, W_pad, C = x_padded.shape
+    k_h, k_w, C2, C_out = w.shape
+    assert C == C2
+    H_out = (H_pad - k_h) // stride + 1
+    W_out = (W_pad - k_w) // stride + 1
+    grid = (B, H_out)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, k_h=k_h, k_w=k_w, stride=stride,
+                          w_out=W_out),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),      # activations in HBM
+            pl.BlockSpec((k_h, k_w, C, C_out), lambda b, r: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, W_out, C_out), lambda b, r: (b, r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H_out, W_out, C_out), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((k_h, W_pad, C), jnp.int8),     # the line buffer
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(x_padded, w)

@@ -1,0 +1,41 @@
+"""Jit'd wrapper: SAME padding + requantization around the Pallas conv."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d_int8.kernel import conv2d_int8_kernel
+from repro.kernels.conv2d_int8.ref import conv2d_int8_ref
+
+
+def _same_pad(x, k_h, k_w, stride):
+    B, H, W, C = x.shape
+    out_h = -(-H // stride)
+    out_w = -(-W // stride)
+    pad_h = max((out_h - 1) * stride + k_h - H, 0)
+    pad_w = max((out_w - 1) * stride + k_w - W, 0)
+    return jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                       (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+def conv2d_int8(x, w, *, stride: int = 1, interpret: bool = False):
+    """SAME conv, int8 in / int32 out, via the line-buffer Pallas kernel."""
+    k_h, k_w = w.shape[:2]
+    xp = _same_pad(x, k_h, k_w, stride)
+    return conv2d_int8_kernel(xp, w, stride=stride, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+def conv2d_int8_requant(x, w, w_scale, bias, act_scale: float = 0.05, *,
+                        stride: int = 1, relu: bool = True,
+                        interpret: bool = False):
+    """Full HPIPE layer engine: conv + per-channel dequant + bias + relu +
+    requantize to int8 for the next engine (models/cnn.py contract)."""
+    y = conv2d_int8(x, w, stride=stride, interpret=interpret)
+    y = y.astype(jnp.float32) * (w_scale * act_scale) + bias
+    if relu:
+        y = jax.nn.relu(y)
+    return jnp.clip(jnp.round(y / act_scale), -127, 127).astype(jnp.int8)

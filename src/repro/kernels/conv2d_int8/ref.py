@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the int8 conv engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_int8_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
+    """x: [B,H,W,C] int8; w: [kh,kw,C,Co] int8 -> int32 [B,H',W',Co]."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.int8), w.astype(jnp.int8),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)

@@ -1,0 +1,83 @@
+"""Jit'd wrappers accepting the model's [B,S,H,hd] layout.
+
+``flash_attention``       forward only (serving / tests)
+``flash_attention_vjp``   differentiable (custom_vjp with the flash
+                          backward kernels) — what the training path uses
+                          when kernels are enabled
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (flash_attention_bwd,
+                                                  flash_attention_kernel)
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, bq: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd] -> [B,Sq,H,hd] (model layout)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_kernel(qt, kt, vt, causal=causal, window=window,
+                                 softcap=softcap, bq=bq, bk=bk,
+                                 interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_vjp(q, k, v, causal, window, softcap, bq, bk,
+                        interpret):
+    """Differentiable flash attention, model layout [B,S,H,hd] /
+    [B,S,KV,hd].  GQA: k/v repeat to H in fwd; dk/dv sum back per group."""
+    o, _ = _fwd_impl(q, k, v, causal, window, softcap, bq, bk, interpret)
+    return o
+
+
+def _fwd_impl(q, k, v, causal, window, softcap, bq, bk, interpret):
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o, lse = flash_attention_kernel(qt, kt, vt, causal=causal,
+                                    window=window, softcap=softcap, bq=bq,
+                                    bk=bk, interpret=interpret,
+                                    return_lse=True)
+    return o.transpose(0, 2, 1, 3), (q, k, v, o, lse)
+
+
+def _fwd_rule(q, k, v, causal, window, softcap, bq, bk, interpret):
+    out, res = _fwd_impl(q, k, v, causal, window, softcap, bq, bk,
+                         interpret)
+    return out, res
+
+
+def _bwd_rule(causal, window, softcap, bq, bk, interpret, res, g):
+    q, k, v, o, lse = res
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+    dot = g.transpose(0, 2, 1, 3)
+    dq, dk, dv = flash_attention_bwd(qt, kt, vt, o, lse, dot,
+                                     causal=causal, window=window,
+                                     softcap=softcap, bq=bq, bk=bk,
+                                     interpret=interpret)
+    dq = dq.transpose(0, 2, 1, 3).astype(q.dtype)
+    # GQA: sum grouped-head grads back to the KV heads
+    hd_v = v.shape[-1]
+    dk = dk.reshape(B, KV, rep, S, hd).sum(2).transpose(0, 2, 1, 3)
+    dv = dv.reshape(B, KV, rep, S, hd_v).sum(2).transpose(0, 2, 1, 3)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_vjp.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle: direct (materialized) softmax attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0):
+    """q: [B,H,Sq,hd]; k,v: [B,KV,Sk,hd] -> [B,H,Sq,hd].  O(S^2) memory —
+    oracle only."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.maximum(
+        jnp.sum(p, -1, keepdims=True), 1e-30), v.astype(jnp.float32))
+    return out.astype(q.dtype)

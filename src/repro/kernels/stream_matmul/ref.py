@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the streamed-weight matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stream_matmul_ref(x, w):
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+    if out_dtype == jnp.int8:
+        out_dtype = jnp.int32
+    acc = jnp.dot(x.astype(jnp.float32) if out_dtype != jnp.int32 else x,
+                  w.astype(jnp.float32) if out_dtype != jnp.int32 else w,
+                  preferred_element_type=(jnp.int32 if out_dtype == jnp.int32
+                                          else jnp.float32))
+    return acc.astype(out_dtype)

@@ -1,0 +1,293 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each of the 10 assigned architectures x its applicable input shapes,
+this builds abstract params (jax.eval_shape — nothing is allocated),
+applies the H2PIPE placement plan to the shardings, and runs
+``jit(step).lower(...).compile()`` on the production meshes:
+
+  * 16 x 16            (data, model)       — single pod, 256 chips
+  * 2 x 16 x 16        (pod, data, model)  — two pods, 512 chips
+
+``train_*`` cells lower the full train step (fwd + bwd + ZeRO AdamW);
+``prefill_*`` cells lower the prompt-processing serve step; ``decode_*`` /
+``long_*`` cells lower one-token decode against a KV cache of seq_len.
+
+Per cell it prints ``memory_analysis()`` (proves the program fits) and
+``cost_analysis()`` FLOPs/bytes, plus the three roofline terms derived by
+``repro.roofline.analysis``.  Results are appended to a JSON report that
+EXPERIMENTS.md §Dry-run / §Roofline consume.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+      --shape train_4k --mesh single --stream-plan on
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_arch, shape_applicable
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import streaming
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import transformer as tmod
+from repro.models.accounting import count_params, model_flops_per_token
+from repro.models.layers import dp_spec, set_mesh_axis_sizes
+from repro.optim import adamw
+from repro.roofline import analysis
+from repro.roofline.jaxpr_cost import cost_of
+from repro.runtime.trainer import TrainConfig, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def train_microbatches(shape: ShapeConfig) -> int:
+    """Gradient-accumulation factor for the train dry-run: keeps the live
+    residual set (saved layer-scan carries) to ~1/M of the global batch —
+    the activation-tier budget, exactly the paper's line-buffer reasoning
+    applied to training."""
+    for m in (8, 4, 2):
+        if shape.global_batch % m == 0 and shape.global_batch // m >= 8:
+            return m
+    return 1
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        mb = train_microbatches(shape) if shape.kind == "train" else 1
+        lead = (mb, B // mb) if mb > 1 else (B,)
+        feed = {
+            "tokens": jax.ShapeDtypeStruct(lead + (S,), jnp.int32),
+        }
+        if shape.kind == "train":
+            feed["labels"] = jax.ShapeDtypeStruct(lead + (S,), jnp.int32)
+        if arch.family == "vlm":
+            feed["patches"] = jax.ShapeDtypeStruct(
+                lead + (arch.n_patches, arch.d_model), jnp.float32)
+        if arch.enc_dec:
+            feed["frames"] = jax.ShapeDtypeStruct(
+                lead + (arch.n_frames, arch.d_model), jnp.float32)
+        return feed
+    # decode: one new token + cache of length S
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+
+
+def batch_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, P]:
+    mb = train_microbatches(shape) if shape.kind == "train" else 1
+    per = shape.global_batch // mb
+    dp = dp_spec(per) or None
+    lead = (None, dp) if mb > 1 and shape.kind == "train" else (dp,)
+    out = {"tokens": P(*lead, None)}
+    if shape.kind == "train":
+        out["labels"] = P(*lead, None)
+    if shape.kind in ("train", "prefill"):
+        if arch.family == "vlm":
+            out["patches"] = P(*lead, None, None)
+        if arch.enc_dec:
+            out["frames"] = P(*lead, None, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+
+def _named(mesh: Mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+               stream_plan: bool = True,
+               donate: bool = True) -> Tuple[Any, Dict[str, Any]]:
+    """Lower+compile one cell.  Returns (compiled, info)."""
+    set_mesh_axis_sizes(mesh_axis_sizes(mesh))
+    abstract_params = jax.eval_shape(
+        lambda: tmod.init_params(jax.random.PRNGKey(0), arch))
+    pspecs = tmod.param_specs(arch)
+    plan_notes = "off"
+    if stream_plan:
+        plan = streaming.plan_placement(abstract_params, pspecs, arch)
+        pspecs = streaming.apply_plan_to_specs(pspecs, plan, abstract_params)
+        plan_notes = plan.notes
+    p_shard = _named(mesh, pspecs)
+    feed = input_specs(arch, shape)
+    b_shard = _named(mesh, batch_specs(arch, shape))
+
+    info: Dict[str, Any] = {"plan": plan_notes}
+
+    with mesh:
+        if shape.kind == "train":
+            from repro.models.layers import kernel_mode_enabled
+            from repro.optim.adamw import AdamWConfig
+            tcfg = TrainConfig(
+                microbatches=train_microbatches(shape),
+                adamw=AdamWConfig(grad_wire_bf16=kernel_mode_enabled()))
+            abstract_opt = jax.eval_shape(
+                lambda p: adamw.init(p, tcfg.adamw), abstract_params)
+            o_specs = adamw.state_specs(abstract_params, pspecs, tcfg.adamw)
+            o_shard = _named(mesh, o_specs)
+            step = make_train_step(arch, tcfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(abstract_params, abstract_opt, feed)
+            jc = cost_of(step, abstract_params, abstract_opt, feed)
+            tokens = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            def serve_step(params, batch):
+                logits, cache = tmod.prefill(params, arch, batch,
+                                             max_seq=shape.seq_len)
+                return logits, cache
+            c_specs = tmod.cache_specs(arch, shape.global_batch)
+            c_shard = _named(mesh, c_specs)
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_shard, b_shard),
+                             out_shardings=(None, c_shard))
+            lowered = jitted.lower(abstract_params, feed)
+            jc = cost_of(serve_step, abstract_params, feed)
+            tokens = shape.global_batch * shape.seq_len
+        else:                                          # decode
+            enc_len = arch.n_frames if arch.enc_dec else 0
+            abstract_cache = jax.eval_shape(
+                lambda: tmod.init_cache(arch, shape.global_batch,
+                                        shape.seq_len, enc_len=enc_len))
+            c_specs = tmod.cache_specs(arch, shape.global_batch)
+            c_shard = _named(mesh, c_specs)
+
+            def serve_step(params, cache, tokens):
+                return tmod.decode_step(params, arch, cache, tokens,
+                                        jnp.int32(shape.seq_len - 1))
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(p_shard, c_shard, b_shard["tokens"]),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(abstract_params, abstract_cache,
+                                   feed["tokens"])
+            jc = cost_of(serve_step, abstract_params, abstract_cache,
+                         feed["tokens"])
+            tokens = shape.global_batch
+        compiled = lowered.compile()
+
+    # model flops: 6*N_active*tokens for train (x3 fwd+bwd), 2*N_active*t
+    # for inference (fwd only)
+    n_act = count_params(arch, active_only=True)
+    if shape.kind == "train":
+        mf = 6 * n_act * tokens
+    else:
+        mf = 2 * n_act * tokens
+    info["model_flops"] = float(mf)
+    info["tokens"] = tokens
+    info["global_flops"] = jc["flops"]
+    info["global_bytes"] = jc["bytes"]
+    return compiled, info
+
+
+def run_cell(arch_id: str, shape_id: str, mesh_kind: str, *,
+             stream_plan: bool = True, kernels: bool = False,
+             verbose: bool = True) -> Optional[Dict[str, Any]]:
+    from repro.models.layers import set_kernel_mode
+    set_kernel_mode(kernels, interpret=True)
+    arch = get_arch(arch_id)
+    shape = SHAPES[shape_id]
+    ok, why = shape_applicable(arch, shape)
+    if not ok:
+        if verbose:
+            print(f"SKIP {arch_id} x {shape_id}: {why}")
+        return {"arch": arch_id, "shape": shape_id, "mesh": mesh_kind,
+                "skipped": why}
+    if arch.enc_dec and shape.kind == "decode" and shape.seq_len > 32768:
+        pass
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    compiled, info = lower_cell(arch, shape, mesh, stream_plan=stream_plan)
+    dt = time.time() - t0
+    roof = analysis.analyze(
+        compiled, arch=arch_id, shape=shape_id,
+        mesh_name="x".join(map(str, mesh.devices.shape)), chips=chips,
+        model_flops=info["model_flops"],
+        global_flops=info["global_flops"],
+        global_bytes=info["global_bytes"])
+    row = roof.row()
+    row.update({"compile_s": dt, "plan": info["plan"],
+                "coll_detail": {k: int(v) for k, v in
+                                roof.coll_detail.items()},
+                "skipped": None})
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"PASS {arch_id} x {shape_id} on {row['mesh']}  "
+              f"compile={dt:.1f}s")
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}"
+              f"GiB out={ma.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB (per device)")
+        print(f"  cost: flops/dev={roof.hlo_flops:.3e} "
+              f"bytes/dev={roof.hlo_bytes:.3e} coll/dev={roof.coll_bytes:.3e}")
+        print(f"  roofline: compute={roof.t_compute*1e3:.2f}ms "
+              f"memory={roof.t_memory*1e3:.2f}ms "
+              f"collective={roof.t_collective*1e3:.2f}ms "
+              f"-> {roof.dominant}-bound, useful={roof.useful_fraction:.2f} "
+              f"mfu@bound={roof.mfu_at_bound:.3f}")
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default all)")
+    ap.add_argument("--shape", default=None, help="one shape id (default all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--stream-plan", default="on", choices=["on", "off"])
+    ap.add_argument("--kernels", default="off", choices=["on", "off"],
+                    help="route attention through the Pallas flash kernels")
+    ap.add_argument("--out", default="dryrun_report.json")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    rows = []
+    failures = []
+    for mk in meshes:
+        for a in archs:
+            for s in shapes:
+                try:
+                    row = run_cell(a, s, mk,
+                                   stream_plan=args.stream_plan == "on",
+                                   kernels=args.kernels == "on")
+                    if row:
+                        rows.append(row)
+                except Exception as e:                       # noqa: BLE001
+                    failures.append((a, s, mk, repr(e)))
+                    print(f"FAIL {a} x {s} on {mk}: {e!r}")
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    print(f"\n{len(rows)} cells recorded -> {args.out}; "
+          f"{len(failures)} failures")
+    for f_ in failures:
+        print("  FAIL:", *f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

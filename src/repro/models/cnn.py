@@ -1,0 +1,158 @@
+"""JAX CNN models built from the H2PIPE per-layer descriptors.
+
+The paper's accelerator is generated layer-by-layer from ``ConvLayerSpec``s;
+we mirror that: ``init_cnn_params`` / ``cnn_forward`` consume the same specs
+that drive the placement algorithm (Eq. 1), the memory table (Table I) and
+the traffic bound (Eq. 2), so the numbers in the benchmarks refer to the
+exact network that runs.
+
+Numerics follow the paper: int8 weights with per-output-channel scales
+(int8 fine-tune of an fp32 model); activations int8 with per-tensor scale.
+Compute accumulates in int32 on the MXU (jnp path: int8 x int8 -> int32
+via preferred_element_type), then requantizes — the Pallas ``conv2d_int8``
+kernel implements the same contract.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.cnn import CNNConfig, ConvLayerSpec
+from repro.models.layers import maybe_axis, MODEL_AXIS
+
+Params = Dict[str, Any]
+
+
+def _qscale(key, shape):
+    return jnp.full(shape, 0.05, jnp.float32)
+
+
+def init_conv_layer(key, spec: ConvLayerSpec) -> Params:
+    kw, kh = spec.k_w, spec.k_h
+    if spec.kind == "dwconv":
+        w_shape = (kh, kw, 1, spec.c_in)                    # HWIO depthwise
+        c_out = spec.c_in
+    else:
+        w_shape = (kh, kw, spec.c_in, spec.c_out)
+        c_out = spec.c_out
+    w = jax.random.randint(key, w_shape, -127, 128, jnp.int8)
+    return {
+        "w": w,
+        "w_scale": _qscale(key, (c_out,)),
+        "bias": jnp.zeros((c_out,), jnp.float32),
+    }
+
+
+def conv_layer_specs(spec: ConvLayerSpec) -> Params:
+    if spec.kind == "dwconv":
+        ax = maybe_axis(spec.c_in, MODEL_AXIS)
+        return {"w": P(None, None, None, ax), "w_scale": P(ax), "bias": P(ax)}
+    ax = maybe_axis(spec.c_out, MODEL_AXIS)
+    return {"w": P(None, None, None, ax), "w_scale": P(ax), "bias": P(ax)}
+
+
+def conv_layer_forward(params: Params, spec: ConvLayerSpec, x,
+                       act_scale: float = 0.05, relu: bool = True):
+    """x: [B,H,W,C] int8.  Returns int8 activations (requantized)."""
+    feature_group_count = spec.c_in if spec.kind == "dwconv" else 1
+    pad = "SAME" if spec.kind != "fc" else "VALID"
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.int8), params["w"].astype(jnp.int8),
+        window_strides=(spec.stride, spec.stride),
+        padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=feature_group_count,
+        preferred_element_type=jnp.int32)
+    y = y.astype(jnp.float32) * (params["w_scale"] * act_scale) + params["bias"]
+    if relu:
+        y = jax.nn.relu(y)
+    # requantize to int8 for the next layer engine
+    y_q = jnp.clip(jnp.round(y / act_scale), -127, 127).astype(jnp.int8)
+    return y_q, y
+
+
+def init_cnn_params(key, cfg: CNNConfig) -> Params:
+    ks = jax.random.split(key, len(cfg.layers))
+    return {l.name: init_conv_layer(k, l) for k, l in zip(ks, cfg.layers)}
+
+
+def cnn_param_specs(cfg: CNNConfig) -> Params:
+    return {l.name: conv_layer_specs(l) for l in cfg.layers}
+
+
+def _is_residual_add(cfg: CNNConfig, idx: int) -> bool:
+    return cfg.name.startswith("resnet")
+
+
+def cnn_forward(params: Params, cfg: CNNConfig, images) -> jnp.ndarray:
+    """Plain feed-forward execution (the functional reference; the dataflow
+    executor in core/dataflow.py runs the same layers as a pipeline).
+
+    images: [B,224,224,3] (or reduced) int8.  Returns logits [B,classes].
+    Residual/downsample wiring for ResNets is reconstructed from the layer
+    names emitted by the config builders (``s{i}b{j}c{k}`` / ``...ds``).
+    """
+    x = images
+    layers = list(cfg.layers)
+    i = 0
+    skip: Optional[jnp.ndarray] = None
+    block_in: Optional[jnp.ndarray] = None
+    while i < len(layers):
+        spec = layers[i]
+        name = spec.name
+        if name == "stem":
+            x, _ = conv_layer_forward(params[name], spec, x)
+            if cfg.name.startswith("resnet"):
+                # 3x3 maxpool stride 2
+                x = -jax.lax.reduce_window(
+                    -x.astype(jnp.float32), jnp.inf, jax.lax.min,
+                    (1, 3, 3, 1), (1, 2, 2, 1), "SAME").astype(jnp.int8)
+            i += 1
+            continue
+        if cfg.name.startswith("resnet") and name[0] == "s" and "b" in name:
+            # collect the block: convs then optional downsample
+            block = [spec]
+            j = i + 1
+            prefix = name[:name.index("c")] if "c" in name else name[:-2]
+            while j < len(layers) and layers[j].name.startswith(prefix):
+                block.append(layers[j])
+                j += 1
+            ds = [b for b in block if b.name.endswith("ds")]
+            convs = [b for b in block if not b.name.endswith("ds")]
+            identity = x
+            h = x
+            for ci, cspec in enumerate(convs):
+                last = ci == len(convs) - 1
+                h, _ = conv_layer_forward(params[cspec.name], cspec, h,
+                                          relu=not last)
+            if ds:
+                identity, _ = conv_layer_forward(params[ds[0].name], ds[0],
+                                                 identity, relu=False)
+            y = h.astype(jnp.int32) + identity.astype(jnp.int32)
+            x = jnp.clip(y, -127, 127).astype(jnp.int8)
+            x = jnp.where(x > 0, x, 0)                      # relu on int8
+            i = j
+            continue
+        if name.startswith("fc") or name in ("head0", "head1", "head"):
+            if x.ndim == 4 and x.shape[1] > spec.k_h:
+                # global average pool before the first fc (HPIPE folds this)
+                x = jnp.mean(x.astype(jnp.float32), axis=(1, 2), keepdims=True)
+                x = jnp.clip(jnp.round(x / 0.05), -127, 127).astype(jnp.int8)
+            last = i == len(layers) - 1
+            x, y_f = conv_layer_forward(params[name], spec, x, relu=not last)
+            if last:
+                return y_f.reshape(y_f.shape[0], -1)
+            i += 1
+            continue
+        x, _ = conv_layer_forward(params[name], spec, x)
+        i += 1
+    # no explicit fc tail (shouldn't happen) — pool and return
+    return jnp.mean(x.astype(jnp.float32), axis=(1, 2))
+
+
+def cnn_input_shape(cfg: CNNConfig, batch: int) -> Tuple[int, int, int, int]:
+    l0 = cfg.layers[0]
+    return (batch, l0.in_h, l0.in_w, l0.c_in)

@@ -1,0 +1,128 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+MLA compresses K/V into a low-rank latent ``c_kv`` (rank ``kv_lora_rank``)
+plus a single shared RoPE key ``k_pe``.  This is the activation-side analogue
+of H2PIPE's insight: the latent cache is the small, latency-critical state
+kept in the fast tier, while the big decompression weights stream from HBM.
+
+Decode uses the *absorbed* formulation (W_UK folded into the query, W_UV into
+the output) so the per-step cache read is only [S, kv_rank + rope_dim].
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (MODEL_AXIS, _dense_init, _flash_call,
+                                 apply_rope, blockwise_attention,
+                                 kernel_mode_enabled, maybe_axis, rmsnorm,
+                                 init_rmsnorm, rmsnorm_specs)
+
+Params = Dict[str, Any]
+
+
+def init_mla(key, cfg) -> Params:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": _dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": init_rmsnorm(m.q_lora_rank),
+        "wq_b": _dense_init(ks[1], (m.q_lora_rank, H,
+                                    m.qk_nope_head_dim + m.qk_rope_head_dim),
+                            dtype),
+        "wkv_a": _dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                             dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank),
+        "wk_b": _dense_init(ks[3], (m.kv_lora_rank, H, m.qk_nope_head_dim),
+                            dtype),
+        "wv_b": _dense_init(ks[4], (m.kv_lora_rank, H, m.v_head_dim), dtype),
+        "wo": _dense_init(ks[5], (H, m.v_head_dim, d), dtype),
+    }
+
+
+def mla_specs(cfg) -> Params:
+    h_ax = maybe_axis(cfg.n_heads, MODEL_AXIS)
+    return {
+        "wq_a": P(None, None),
+        "q_norm": rmsnorm_specs(),
+        "wq_b": P(None, h_ax, None),
+        "wkv_a": P(None, None),
+        "kv_norm": rmsnorm_specs(),
+        "wk_b": P(None, h_ax, None),
+        "wv_b": P(None, h_ax, None),
+        "wo": P(h_ax, None, None),
+    }
+
+
+def _project_q(params, cfg, x, positions):
+    m = cfg.mla
+    q_lat = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    q_lat = rmsnorm(params["q_norm"], q_lat, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"])
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_pe = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _project_kv_latent(params, cfg, x, positions):
+    m = cfg.mla
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv = rmsnorm(params["kv_norm"], kv[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_pe = apply_rope(kv[..., None, m.kv_lora_rank:], positions, cfg.rope_theta)
+    return c_kv, k_pe[:, :, 0]
+
+
+def mla_forward(params: Params, cfg, x, positions, *,
+                kv_cache: Optional[Tuple] = None,
+                cache_index: Optional[jnp.ndarray] = None):
+    """kv_cache = (c_kv [B,S,r], k_pe [B,S,rope]) — the compressed cache."""
+    m = cfg.mla
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_pe = _project_q(params, cfg, x, positions)
+    c_new, kpe_new = _project_kv_latent(params, cfg, x, positions)
+
+    if kv_cache is None:
+        # train / prefill: decompress K,V and run blockwise attention
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_new, params["wk_b"])
+        v = jnp.einsum("bsr,rhk->bshk", c_new, params["wv_b"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe_new[:, :, None],
+                                      k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = None
+        if kernel_mode_enabled() and \
+                q.shape[1] % min(128, q.shape[1]) == 0:
+            # flash kernel with split head dims (qk 192 / v 128) — the MLA
+            # score tensor never round-trips HBM (§Perf HC2-it2)
+            out = _flash_call(q, k, v, causal=True, window=0, softcap=0.0)
+        if out is None:
+            out = blockwise_attention(q, k, v, causal=True)
+        new_cache = (c_new, kpe_new)
+    else:
+        cc, pc = kv_cache
+        cc = jax.lax.dynamic_update_index_in_dim(
+            cc, c_new[:, 0].astype(cc.dtype), cache_index, axis=1)
+        pc = jax.lax.dynamic_update_index_in_dim(
+            pc, kpe_new[:, 0].astype(pc.dtype), cache_index, axis=1)
+        # absorbed decode: q_abs[b,1,h,r] = q_nope · W_UK
+        q_abs = jnp.einsum("bqhk,rhk->bqhr", q_nope, params["wk_b"])
+        scores = (jnp.einsum("bqhr,bsr->bhqs", q_abs, cc)
+                  + jnp.einsum("bqhk,bsk->bhqs", q_pe, pc)).astype(jnp.float32)
+        scores = scores * scale
+        S = cc.shape[1]
+        valid = jnp.arange(S)[None, None, None, :] <= cache_index
+        scores = jnp.where(valid, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", w.astype(cc.dtype), cc)
+        out = jnp.einsum("bqhr,rhk->bqhk", o_lat, params["wv_b"])
+        new_cache = (cc, pc)
+
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), params["wo"])
+    return y, new_cache

@@ -1,0 +1,372 @@
+"""State-space and recurrent blocks: Mamba (hymba's SSM heads) and the
+xLSTM pair (mLSTM / sLSTM).
+
+TPU adaptation (DESIGN.md §2): the recurrences are evaluated in *chunked*
+form — ``lax.scan`` over chunks of the sequence with a parallel
+(associative-scan / cumulative) evaluation inside each chunk.  This bounds
+the activation working set to one chunk (the VMEM-tier analogue of HPIPE's
+line buffers) while keeping the sequential HLO loop short (S/chunk steps).
+
+Decode carries an explicit recurrent state so serving cost per token is
+O(d_inner * d_state) — these archs are the ones that run ``long_500k``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import MODEL_AXIS, _dense_init, maybe_axis
+
+Params = Dict[str, Any]
+
+CHUNK = 128     # within-chunk parallel width (MXU/VPU-friendly multiple of 8)
+
+
+def _inner_dim(cfg) -> int:
+    return int(cfg.d_model * cfg.ssm.expand)
+
+
+def _dt_rank(cfg) -> int:
+    return max(1, _inner_dim(cfg) // 16)
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg) -> Params:
+    s = cfg.ssm
+    d, inner, dtr = cfg.d_model, _inner_dim(cfg), _dt_rank(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * inner), dtype),
+        "conv_w": _dense_init(ks[1], (s.conv_width, inner), dtype,
+                              scale=1.0 / math.sqrt(s.conv_width)),
+        "conv_b": jnp.zeros((inner,), dtype),
+        # x -> (dt_rank, B, C)
+        "x_proj": _dense_init(ks[2], (inner, dtr + 2 * s.state_dim), dtype),
+        "dt_proj": _dense_init(ks[3], (dtr, inner), dtype),
+        "dt_bias": jnp.log(jnp.expm1(                       # softplus^-1 init
+            jnp.exp(jax.random.uniform(ks[4], (inner,),
+                                       minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32)
+                         )[None, :].repeat(inner, 0),        # [inner, state]
+        "D": jnp.ones((inner,), jnp.float32),
+        "out_proj": _dense_init(ks[5], (inner, d), dtype),
+    }
+
+
+def mamba_specs(cfg) -> Params:
+    inner = _inner_dim(cfg)
+    ax = maybe_axis(inner, MODEL_AXIS)
+    return {
+        "in_proj": P(None, ax),     # 2*inner divisible iff inner is
+        "conv_w": P(None, ax),
+        "conv_b": P(ax),
+        "x_proj": P(ax, None),
+        "dt_proj": P(None, ax),
+        "dt_bias": P(ax),
+        "A_log": P(ax, None),
+        "D": P(ax),
+        "out_proj": P(ax, None),
+    }
+
+
+def _causal_conv(x, w, b, state: Optional[jnp.ndarray]):
+    """Depthwise causal conv over time.  x: [B,S,inner]; w: [K,inner].
+    state: [B,K-1,inner] trailing context (decode) or None (train/prefill).
+    Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                  # [B,S+K-1,inner]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else pad[:, :0]
+    return y, new_state
+
+
+def _ssm_scan_chunked(u, dt, Bc, Cc, A, h0):
+    """Chunked selective-scan.
+
+    u,dt: [B,S,inner]; Bc,Cc: [B,S,state]; A: [inner,state]; h0: [B,inner,state]
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t ;  y_t = C_t . h_t
+    Within a chunk the linear recurrence is evaluated with cumulative products
+    in log space (parallel); chunks are threaded with lax.scan.
+    """
+    Bsz, S, inner = u.shape
+    state = A.shape[1]
+    chunk = min(CHUNK, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def chunk_step(h, args):
+        uc, dtc, bc, cc = args                              # [B,chunk,...]
+        # decay factors a_t = exp(dt_t * A)   [B,chunk,inner,state]
+        log_a = dtc[..., None] * A[None, None]              # A<0
+        # suffix products P_t = prod_{s<=t} a_s  via cumsum of logs
+        cum = jnp.cumsum(log_a, axis=1)
+        x_t = dtc[..., None] * bc[:, :, None, :] * uc[..., None]
+        # h_t = exp(cum_t) * (h0 + sum_{s<=t} exp(-cum_s) x_s)
+        # guard exp(-cum) overflow: cum <= 0 so -cum >= 0 can overflow for
+        # long chunks; instead use the scan-free two-pass stable form:
+        #   z_s = x_s * exp(cum_t - cum_s)  computed as segment sums.
+        # We use the standard stable trick: h_t = exp(cum_t)*h0 +
+        #   sum_s exp(cum_t - cum_s) x_s, with exp(cum_t-cum_s) formed by
+        #   cumulative logsumexp-style matrix; cheap version: associative scan.
+        def op(l, r):
+            al, bl = l
+            ar, br = r
+            return al + ar, bl * jnp.exp(ar) + br
+        _, hs = jax.lax.associative_scan(op, (log_a, x_t), axis=1)
+        hs = hs + jnp.exp(cum) * h[:, None]                 # carry-in
+        y = jnp.einsum("bcis,bcs->bci", hs, cc)
+        return hs[:, -1], y
+
+    u32, dt32 = u.astype(jnp.float32), dt.astype(jnp.float32)
+    B32, C32 = Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+    args = tuple(a.reshape((Bsz, nc, chunk) + a.shape[2:]).swapaxes(0, 1)
+                 for a in (u32, dt32, B32, C32))
+    hN, ys = jax.lax.scan(chunk_step, h0.astype(jnp.float32), args)
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, inner)
+    return y, hN
+
+
+def mamba_forward(params: Params, cfg, x, *,
+                  state: Optional[Tuple] = None):
+    """x: [B,S,d].  state = (conv_state [B,K-1,inner], h [B,inner,state]) for
+    decode (S==1) or None.  Returns (y, new_state)."""
+    s = cfg.ssm
+    inner = _inner_dim(cfg)
+    dtr = _dt_rank(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xin, z = xz[..., :inner], xz[..., inner:]
+
+    conv_state = state[0] if state is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xc = jax.nn.silu(xc)
+
+    proj = jnp.einsum("bsi,ie->bse", xc, params["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", proj[..., :dtr], params["dt_proj"])
+        .astype(jnp.float32) + params["dt_bias"])
+    Bc = proj[..., dtr:dtr + s.state_dim]
+    Cc = proj[..., dtr + s.state_dim:]
+    A = -jnp.exp(params["A_log"])                            # [inner,state]
+
+    Bsz = x.shape[0]
+    h0 = (state[1] if state is not None
+          else jnp.zeros((Bsz, inner, s.state_dim), jnp.float32))
+    y, hN = _ssm_scan_chunked(xc, dt, Bc, Cc, A, h0)
+    y = y + xc.astype(jnp.float32) * params["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    return out, (new_conv, hN)
+
+
+def init_mamba_state(cfg, batch: int):
+    s = cfg.ssm
+    inner = _inner_dim(cfg)
+    return (jnp.zeros((batch, s.conv_width - 1, inner), jnp.dtype(cfg.dtype)),
+            jnp.zeros((batch, inner, s.state_dim), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, parallel) and sLSTM (scalar memory, sequential)
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg):
+    dm = int(cfg.d_model * cfg.ssm.mlstm_proj_factor)
+    hd = dm // cfg.n_heads
+    return dm, hd
+
+
+def init_mlstm(key, cfg) -> Params:
+    d = cfg.d_model
+    dm, hd = _mlstm_dims(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "up": _dense_init(ks[0], (d, 2 * dm), dtype),        # x and gate path
+        "wq": _dense_init(ks[1], (dm, dm), dtype),
+        "wk": _dense_init(ks[2], (dm, dm), dtype),
+        "wv": _dense_init(ks[3], (dm, dm), dtype),
+        "w_if": _dense_init(ks[4], (dm, 2 * cfg.n_heads), dtype),  # i,f gates
+        "b_if": jnp.zeros((2 * cfg.n_heads,), jnp.float32),
+        "down": _dense_init(ks[5], (dm, d), dtype),
+    }
+
+
+def mlstm_specs(cfg) -> Params:
+    dm, _ = _mlstm_dims(cfg)
+    ax = maybe_axis(dm, MODEL_AXIS)
+    h_ax = maybe_axis(cfg.n_heads, MODEL_AXIS)
+    return {
+        "up": P(None, ax), "wq": P(None, ax), "wk": P(None, ax),
+        "wv": P(None, ax), "w_if": P(None, h_ax), "b_if": P(h_ax),
+        "down": P(ax, None),
+    }
+
+
+def mlstm_forward(params: Params, cfg, x, *, state=None):
+    """mLSTM = gated linear attention with matrix memory C [B,H,hd,hd].
+
+    Chunked-recurrent evaluation: within a chunk, masked quadratic attention
+    against in-chunk keys plus a read of the carried matrix memory; the memory
+    is updated once per chunk (the standard chunkwise linear-attention form).
+    state = (C [B,H,hd,hd], n [B,H,hd], m [B,H]) for decode.
+    """
+    H = cfg.n_heads
+    dm, hd = _mlstm_dims(cfg)
+    Bsz, S, _ = x.shape
+    ug = jnp.einsum("bsd,de->bse", x, params["up"])
+    u, g = ug[..., :dm], ug[..., dm:]
+    q = jnp.einsum("bse,ef->bsf", u, params["wq"]).reshape(Bsz, S, H, hd)
+    k = jnp.einsum("bse,ef->bsf", u, params["wk"]).reshape(Bsz, S, H, hd)
+    v = jnp.einsum("bse,ef->bsf", u, params["wv"]).reshape(Bsz, S, H, hd)
+    gates = jnp.einsum("bse,eg->bsg", u, params["w_if"]).astype(jnp.float32) \
+        + params["b_if"]
+    i_g = gates[..., :H]                                     # log-space input
+    f_g = jax.nn.log_sigmoid(gates[..., H:])                 # log forget
+
+    q = q.astype(jnp.float32) / math.sqrt(hd)
+    k = k.astype(jnp.float32) / math.sqrt(hd)
+    v32 = v.astype(jnp.float32)
+
+    chunk = min(CHUNK, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    if state is None:
+        C0 = jnp.zeros((Bsz, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((Bsz, H, hd), jnp.float32)
+        m0 = jnp.full((Bsz, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, args):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = args                            # [B,chunk,...]
+        # cumulative log forget within chunk (inclusive)
+        F = jnp.cumsum(fc, axis=1)                           # [B,c,H]
+        # stabilizer per step: m_t = max(F_t + m_in, max_s<=t (F_t - F_s + i_s))
+        lse_in = F + m[:, None]                              # memory path
+        a = ic - F                                           # [B,c,H]
+        run_max = jax.lax.associative_scan(jnp.maximum, a, axis=1)
+        m_t = jnp.maximum(lse_in, F + run_max)
+        # intra-chunk attention: D[t,s] = F_t - F_s + i_s  (s<=t)
+        D = F[:, :, None] - F[:, None, :] + ic[:, None, :, :]    # [B,t,s,H]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        W = jnp.where(mask, jnp.exp(D - m_t[:, :, None]), 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * W
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, vc)
+        n_intra = jnp.einsum("btsh,bshd->bthd", scores, kc)
+        # inter-chunk: read carried memory
+        decay = jnp.exp(lse_in - m_t)                        # [B,c,H]
+        y_inter = jnp.einsum("bthd,bhde->bthe", qc, C) * decay[..., None]
+        n_inter = jnp.einsum("bthd,bhd->bth", qc, n) * decay
+        num = y_intra + y_inter
+        den = jnp.abs(jnp.einsum("bthd,bthd->bth", qc, n_intra)
+                      + n_inter)
+        y = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+        # update memory to end of chunk
+        m_new = m_t[:, -1]                                   # [B,H]
+        Ftot = F[:, -1]                                      # [B,H]
+        w_upd = jnp.exp(ic + (Ftot[:, None] - F) - m_new[:, None])  # [B,c,H]
+        C_new = C * jnp.exp(Ftot + m - m_new)[..., None, None] + \
+            jnp.einsum("bsh,bshd,bshe->bhde", w_upd, kc, vc)
+        n_new = n * jnp.exp(Ftot + m - m_new)[..., None] + \
+            jnp.einsum("bsh,bshd->bhd", w_upd, kc)
+        return (C_new, n_new, m_new), y
+
+    args = tuple(a.reshape((Bsz, nc, chunk) + a.shape[2:]).swapaxes(0, 1)
+                 for a in (q, k, v32, i_g, f_g))
+    (CN, nN, mN), ys = jax.lax.scan(chunk_step, (C0, n0, m0), args)
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, dm)
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    out = jnp.einsum("bse,ed->bsd", y, params["down"])
+    return out, (CN, nN, mN)
+
+
+def init_mlstm_state(cfg, batch: int):
+    _, hd = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def init_slstm(key, cfg) -> Params:
+    d = cfg.d_model
+    ds = int(cfg.d_model * cfg.ssm.slstm_proj_factor)
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        # 4 gates (i,f,z,o) from input and recurrent paths
+        "w_x": _dense_init(ks[0], (d, 4 * d), dtype),
+        "w_h": _dense_init(ks[1], (d, 4 * d), dtype),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "up": _dense_init(ks[2], (d, ds), dtype),
+        "down": _dense_init(ks[3], (ds, d), dtype),
+    }
+
+
+def slstm_specs(cfg) -> Params:
+    d = cfg.d_model
+    ds = int(d * cfg.ssm.slstm_proj_factor)
+    ax4 = maybe_axis(4 * d, MODEL_AXIS)
+    axs = maybe_axis(ds, MODEL_AXIS)
+    return {"w_x": P(None, ax4), "w_h": P(None, ax4), "b": P(ax4),
+            "up": P(None, axs), "down": P(axs, None)}
+
+
+def slstm_forward(params: Params, cfg, x, *, state=None):
+    """Scalar-memory LSTM with exponential gating and stabilizer state.
+    Sequential over time (true recurrence through h): lax.scan.
+    state = (c,n,m,h) each [B,d]."""
+    d = cfg.d_model
+    Bsz, S, _ = x.shape
+    xg = jnp.einsum("bsd,de->bse", x, params["w_x"]).astype(jnp.float32)
+
+    if state is None:
+        z0 = jnp.zeros((Bsz, d), jnp.float32)
+        state = (z0, z0, jnp.full((Bsz, d), -1e30, jnp.float32), z0)
+
+    w_h = params["w_h"].astype(jnp.float32)
+    b = params["b"]
+
+    def step(carry, xg_t):
+        c, n, m, h = carry
+        g = xg_t + h @ w_h + b
+        i_t, f_t, z_t, o_t = jnp.split(g, 4, axis=-1)
+        f_log = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(f_log + m, i_t)
+        i_e = jnp.exp(i_t - m_new)
+        f_e = jnp.exp(f_log + m - m_new)
+        c_new = f_e * c + i_e * jnp.tanh(z_t)
+        n_new = f_e * n + i_e
+        h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    (cN, nN, mN, hN), hs = jax.lax.scan(step, state, xg.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                    # [B,S,d]
+    y = jnp.einsum("bsd,de->bse", y, params["up"])
+    y = jax.nn.gelu(y)
+    out = jnp.einsum("bse,ed->bsd", y, params["down"])
+    return out, (cN, nN, mN, hN)
+
+
+def init_slstm_state(cfg, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, jnp.full((batch, d), -1e30, jnp.float32), z)

@@ -1,0 +1,607 @@
+"""Full LM assembly for every assigned architecture.
+
+One homogeneous layer stack is *scanned* (params stacked with a leading [L]
+axis, ``lax.scan`` over layers) so 60-80-layer archs trace and compile
+quickly; heterogeneous stacks (xLSTM's mLSTM/sLSTM alternation) use a python
+loop over 12 layers.  Per-layer attention windows are passed as a traced [L]
+array so gemma2's local/global alternation stays a single scanned program.
+
+Public API
+----------
+init_params / param_specs            (structure-matched PartitionSpec tree)
+forward(params, cfg, batch)          -> (hidden [B,S,d], aux dict)
+logits_from_hidden / lm_loss         (chunked over sequence: never [B,S,V])
+init_cache / prefill / decode_step   serving path (ring-buffer KV for
+                                     sliding-window archs -> long_500k)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm as ssm_mod
+from repro.models.ffn import (ffn, ffn_specs, init_ffn, init_moe, moe_ffn,
+                              moe_specs)
+from repro.models.layers import (DP_AXES, MODEL_AXIS, Params, apply_rope,
+                                 attention_forward, attention_specs, constrain,
+                                 cross_attention_forward, cross_attention_kv,
+                                 dp_spec, embed, embedding_specs,
+                                 init_attention, init_embedding, init_rmsnorm,
+                                 pad_vocab, rmsnorm, rmsnorm_specs, unembed)
+from repro.models.mla import init_mla, mla_forward, mla_specs
+
+LOSS_CHUNK = 1024       # sequence chunk for the vocab-safe xent.  Perf
+# note (EXPERIMENTS.md §Perf HC1-it2): the tied-embedding gradient is
+# all-reduced once per chunk by GSPMD, so fewer/bigger chunks trade peak
+# logits memory for collective volume; 1024 keeps the sharded chunk
+# logits ~1.6 GiB/device while quartering the per-chunk AR traffic.
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / specs
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"ln1": init_rmsnorm(cfg.d_model), "ln2": init_rmsnorm(cfg.d_model)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = init_mla(ks[0], cfg)
+    elif cfg.attn_kind != "none":
+        p["attn"] = init_attention(ks[0], cfg)
+    if cfg.family == "hybrid":
+        p["mamba"] = ssm_mod.init_mamba(ks[1], cfg)
+        p["alpha"] = jnp.zeros((), jnp.float32)      # sigmoid(0)=.5 mix
+    if cfg.moe is not None:
+        p["ffn"] = init_moe(ks[2], cfg)
+    elif cfg.d_ff:
+        p["ffn"] = init_ffn(ks[2], cfg.d_model, cfg.d_ff, jnp.dtype(cfg.dtype))
+    return p
+
+
+def _layer_specs(cfg: ArchConfig) -> Params:
+    p: Params = {"ln1": rmsnorm_specs(), "ln2": rmsnorm_specs()}
+    if cfg.attn_kind == "mla":
+        p["attn"] = mla_specs(cfg)
+    elif cfg.attn_kind != "none":
+        p["attn"] = attention_specs(cfg)
+    if cfg.family == "hybrid":
+        p["mamba"] = ssm_mod.mamba_specs(cfg)
+        p["alpha"] = P()
+    if cfg.moe is not None:
+        p["ffn"] = moe_specs(cfg)
+    elif cfg.d_ff:
+        p["ffn"] = ffn_specs(cfg.d_ff)
+    return p
+
+
+def _init_dec_layer(key, cfg: ArchConfig) -> Params:
+    """Decoder layer with cross-attention (enc-dec archs)."""
+    ks = jax.random.split(key, 3)
+    p = _init_layer(ks[0], cfg)
+    p["lnx"] = init_rmsnorm(cfg.d_model)
+    p["cross"] = init_attention(ks[1], cfg)
+    return p
+
+
+def _dec_layer_specs(cfg: ArchConfig) -> Params:
+    p = _layer_specs(cfg)
+    p["lnx"] = rmsnorm_specs()
+    p["cross"] = attention_specs(cfg)
+    return p
+
+
+def _stack_specs(tree):
+    """Prepend the stacked layer axis (unsharded) to every leaf spec."""
+    return jax.tree.map(lambda s: P(None, *s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# model init / specs
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    dtype = jnp.dtype(cfg.dtype)
+    params: Params = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "ln_f": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_embedding(keys[1], cfg.vocab_size,
+                                           cfg.d_model, dtype)
+    if cfg.family == "ssm":                         # xLSTM: alternating blocks
+        bkeys = jax.random.split(keys[2], cfg.n_layers)
+        blocks = []
+        for i, bk in enumerate(bkeys):
+            core = (ssm_mod.init_mlstm(bk, cfg) if i % 2 == 0
+                    else ssm_mod.init_slstm(bk, cfg))
+            blocks.append({"ln": init_rmsnorm(cfg.d_model), "core": core})
+        params["blocks"] = blocks
+        return params
+    if cfg.enc_dec:
+        ekeys = jax.random.split(keys[2], cfg.n_enc_layers)
+        dkeys = jax.random.split(keys[3], cfg.n_layers)
+        params["enc_layers"] = jax.vmap(lambda k: _init_layer(k, cfg))(ekeys)
+        params["dec_layers"] = jax.vmap(lambda k: _init_dec_layer(k, cfg))(dkeys)
+        params["ln_enc"] = init_rmsnorm(cfg.d_model)
+        return params
+    lkeys = jax.random.split(keys[2], cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: _init_layer(k, cfg))(lkeys)
+    return params
+
+
+def param_specs(cfg: ArchConfig) -> Params:
+    specs: Params = {
+        "embed": embedding_specs(cfg.vocab_size),
+        "ln_f": rmsnorm_specs(),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = embedding_specs(cfg.vocab_size)
+    if cfg.family == "ssm":
+        blocks = []
+        for i in range(cfg.n_layers):
+            core = (ssm_mod.mlstm_specs(cfg) if i % 2 == 0
+                    else ssm_mod.slstm_specs(cfg))
+            blocks.append({"ln": rmsnorm_specs(), "core": core})
+        specs["blocks"] = blocks
+        return specs
+    if cfg.enc_dec:
+        specs["enc_layers"] = _stack_specs(_layer_specs(cfg))
+        specs["dec_layers"] = _stack_specs(_dec_layer_specs(cfg))
+        specs["ln_enc"] = rmsnorm_specs()
+        return specs
+    specs["layers"] = _stack_specs(_layer_specs(cfg))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# windows
+# ---------------------------------------------------------------------------
+
+
+def _has_window(cfg: ArchConfig) -> bool:
+    return cfg.attn_kind in ("local_global", "sliding")
+
+
+def layer_windows(cfg: ArchConfig, full: int) -> Optional[jnp.ndarray]:
+    """Per-layer sliding-window sizes as a traced [L] array, or None.
+    ``full`` stands in for 'no window' on global layers (>= any distance)."""
+    if not _has_window(cfg):
+        return None
+    if cfg.attn_kind == "sliding":
+        return jnp.full((cfg.n_layers,), cfg.window, jnp.int32)
+    # local_global: even layers local, odd layers global
+    idx = jnp.arange(cfg.n_layers)
+    return jnp.where(idx % 2 == 0, cfg.window, full).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _x_spec():
+    return P(dp_spec(0) or DP_AXES, None, None)
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch: Dict[str, Any]):
+    """Token embeddings, with VLM patch / decoder-input handling."""
+    x = embed(params["embed"], batch["tokens"]).astype(jnp.dtype(cfg.dtype))
+    x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    if cfg.family == "vlm" and "patches" in batch:
+        # patch embeddings replace the first n_patches token slots
+        x = jax.lax.dynamic_update_slice(
+            x, batch["patches"].astype(x.dtype), (0, 0, 0))
+    return x
+
+
+def _dense_layer_body(cfg: ArchConfig, x, layer_params, window, positions,
+                      *, causal=True, cross_mem=None):
+    """One transformer layer (attn/mla [+mamba] + ffn).
+    Returns (x, aux, kv, mamba_state)."""
+    h = rmsnorm(layer_params["ln1"], x, cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        a, kv = mla_forward(layer_params["attn"], cfg, h, positions)
+    elif cfg.attn_kind == "none":
+        a, kv = 0.0, None
+    else:
+        a, kv = attention_forward(layer_params["attn"], cfg, h, positions,
+                                  window=window, causal=causal)
+    mstate = None
+    if cfg.family == "hybrid":
+        m, mstate = ssm_mod.mamba_forward(layer_params["mamba"], cfg, h)
+        mix = jax.nn.sigmoid(layer_params["alpha"]).astype(x.dtype)
+        a = mix * a + (1.0 - mix) * m
+    x = x + a
+    if cross_mem is not None:
+        hx = rmsnorm(layer_params["lnx"], x, cfg.norm_eps)
+        x = x + cross_attention_forward(layer_params["cross"], cfg, hx,
+                                        cross_mem)
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in layer_params:
+        h2 = rmsnorm(layer_params["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            f, aux = moe_ffn(layer_params["ffn"], cfg, h2, cfg.act)
+        else:
+            f = ffn(layer_params["ffn"], h2, cfg.act)
+        x = x + f
+    return x, aux, kv, mstate
+
+
+def _scan_layers(params_stack, cfg: ArchConfig, x, positions, windows, *,
+                 causal=True, cross_mem=None, remat=False, collect_kv=False):
+    """lax.scan over the stacked layer params.  Returns (x, aux_sum, kvs)."""
+    S = x.shape[1]
+
+    def body(carry, xs):
+        x, aux_sum = carry
+        if windows is not None:
+            lp, w = xs
+        else:
+            lp, w = xs, None
+        x = constrain(x, _x_spec())
+        x, aux, kv, mstate = _dense_layer_body(cfg, x, lp, w, positions,
+                                               causal=causal,
+                                               cross_mem=cross_mem)
+        ys = (kv, mstate) if collect_kv else None
+        return (x, aux_sum + aux), ys
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (params_stack, windows) if windows is not None else params_stack
+    (x, aux_sum), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux_sum, kvs
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, Any], *,
+            remat: bool = False, collect_kv: bool = False):
+    """Returns (hidden [B,S,d], aux) — aux carries the MoE load-balance loss
+    and (when collect_kv) the per-layer stacked K/V for prefill."""
+    aux: Dict[str, Any] = {}
+    if cfg.family == "ssm":
+        x = _embed_inputs(params, cfg, batch)
+        states = []
+        for blk_i, blk in enumerate(params["blocks"]):
+            h = rmsnorm(blk["ln"], x, cfg.norm_eps)
+            fwd = (ssm_mod.mlstm_forward if blk_i % 2 == 0
+                   else ssm_mod.slstm_forward)
+            y, st = fwd(blk["core"], cfg, h)
+            states.append(st)
+            x = x + y
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        aux["moe_loss"] = jnp.zeros(())
+        if collect_kv:
+            aux["states"] = states
+        return x, aux
+
+    if cfg.enc_dec:
+        frames = batch["frames"]                       # [B,F,d] stub frontend
+        Bf, F, _ = frames.shape
+        enc_pos = jnp.broadcast_to(jnp.arange(F), (Bf, F))
+        enc_x = frames.astype(jnp.dtype(cfg.dtype))
+        enc_x, _, _ = _scan_layers(params["enc_layers"], cfg, enc_x, enc_pos,
+                                   None, causal=False, remat=remat)
+        memory = rmsnorm(params["ln_enc"], enc_x, cfg.norm_eps)
+        aux["enc_memory"] = memory
+
+        x = _embed_inputs(params, cfg, batch)
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        def dec_body(carry, lp):
+            x, aux_sum = carry
+            x = constrain(x, _x_spec())
+            mem_kv = cross_attention_kv(lp["cross"], cfg, memory)
+            x, aux_l, kv, _ = _dense_layer_body(cfg, x, lp, None, positions,
+                                                cross_mem=mem_kv)
+            return (x, aux_sum + aux_l), kv if collect_kv else None
+
+        if remat:
+            dec_body = jax.checkpoint(
+                dec_body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux_sum), kvs = jax.lax.scan(
+            dec_body, (x, jnp.zeros(())), params["dec_layers"])
+        aux["moe_loss"] = aux_sum
+        if collect_kv:
+            aux["kv"] = kvs
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return x, aux
+
+    x = _embed_inputs(params, cfg, batch)
+    B, S = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    windows = layer_windows(cfg, S)
+    x, aux_sum, kvs = _scan_layers(params["layers"], cfg, x, positions,
+                                   windows, remat=remat,
+                                   collect_kv=collect_kv)
+    aux["moe_loss"] = aux_sum
+    if collect_kv:
+        aux["kv"] = kvs[0] if kvs is not None else None
+        aux["mstate"] = kvs[1] if kvs is not None else None
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# logits / loss (vocab-chunked: the full [B,S,V] tensor never exists)
+# ---------------------------------------------------------------------------
+
+
+def _unembed_table(params, cfg: ArchConfig):
+    return params["embed" if cfg.tie_embeddings else "unembed"]
+
+
+def logits_from_hidden(params, cfg: ArchConfig, hidden):
+    """Logits for a small number of positions (decode/last-token only)."""
+    return unembed(_unembed_table(params, cfg), hidden,
+                   cfg.final_logit_softcap)
+
+
+def lm_loss(params, cfg: ArchConfig, hidden, labels, mask):
+    """Causal-LM cross-entropy, scanned over sequence chunks.
+
+    hidden: [B,S,d]; labels/mask: [B,S].  Padded vocab columns are excluded
+    from the logsumexp.  Returns (mean_loss, denom)."""
+    B, S, d = hidden.shape
+    table = _unembed_table(params, cfg)["table"].astype(jnp.float32)
+    vp = table.shape[0]
+    col_ok = (jnp.arange(vp) < cfg.vocab_size)
+
+    chunk = min(LOSS_CHUNK, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    def step(carry, idx):
+        tot, den = carry
+        h = jax.lax.dynamic_slice_in_dim(hidden, idx * chunk, chunk, axis=1)
+        y = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        m = jax.lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, axis=1)
+        logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32), table)
+        if cfg.final_logit_softcap:
+            logits = jnp.tanh(logits / cfg.final_logit_softcap) * \
+                cfg.final_logit_softcap
+        logits = jnp.where(col_ok, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        tot = tot + jnp.sum((lse - gold) * m)
+        den = den + jnp.sum(m)
+        return (tot, den), None
+
+    (tot, den), _ = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros(())),
+                                 jnp.arange(nc))
+    return tot / jnp.maximum(den, 1.0), den
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, remat: bool = True,
+            moe_loss_weight: float = 0.01):
+    hidden, aux = forward(params, cfg, batch, remat=remat)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(batch["labels"], jnp.float32)
+    loss, _ = lm_loss(params, cfg, hidden, batch["labels"], mask)
+    if cfg.moe is not None:
+        loss = loss + moe_loss_weight * aux["moe_loss"] / max(cfg.n_layers, 1)
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode_step
+# ---------------------------------------------------------------------------
+
+
+def kv_cache_len(cfg: ArchConfig, max_seq: int) -> int:
+    """Ring buffer of size window for pure sliding-window archs."""
+    if cfg.attn_kind == "sliding":
+        return min(max_seq, cfg.window)
+    return max_seq
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               enc_len: int = 0) -> Params:
+    """Cache pytree for decode.  All leaves have a leading [L] layer axis."""
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    hd = cfg.resolved_head_dim
+    cache: Params = {}
+    if cfg.family == "ssm":
+        # per-block recurrent states (python list — heterogeneous)
+        states = []
+        for i in range(L):
+            states.append(ssm_mod.init_mlstm_state(cfg, batch) if i % 2 == 0
+                          else ssm_mod.init_slstm_state(cfg, batch))
+        cache["states"] = states
+        return cache
+    S_c = kv_cache_len(cfg, max_seq)
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        cache["c"] = jnp.zeros((L, batch, S_c, m.kv_lora_rank), dtype)
+        cache["pe"] = jnp.zeros((L, batch, S_c, m.qk_rope_head_dim), dtype)
+    elif cfg.attn_kind != "none":
+        cache["k"] = jnp.zeros((L, batch, S_c, cfg.n_kv_heads, hd), dtype)
+        cache["v"] = jnp.zeros((L, batch, S_c, cfg.n_kv_heads, hd), dtype)
+    if cfg.family == "hybrid":
+        conv0, h0 = ssm_mod.init_mamba_state(cfg, batch)
+        cache["conv"] = jnp.tile(conv0[None], (L,) + (1,) * conv0.ndim)
+        cache["h"] = jnp.tile(h0[None], (L,) + (1,) * h0.ndim)
+    if cfg.enc_dec:
+        cache["cross_k"] = jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, hd),
+                                     dtype)
+        cache["cross_v"] = jnp.zeros((L, batch, enc_len, cfg.n_kv_heads, hd),
+                                     dtype)
+    return cache
+
+
+def cache_specs(cfg: ArchConfig, batch: int = 0) -> Params:
+    """PartitionSpecs for the cache: batch over DP (when divisible);
+    kv-heads over model where divisible, else the sequence axis over model
+    (context-parallel decode — DESIGN.md §5: keeps the 32k x 128 caches
+    inside per-chip HBM)."""
+    from repro.models.layers import axis_size, maybe_axis
+    dp = dp_spec(batch)
+    kv_ax = maybe_axis(cfg.n_kv_heads, MODEL_AXIS)
+    seq_ax = None if kv_ax is not None else MODEL_AXIS
+    cache: Params = {}
+    if cfg.family == "ssm":
+        cache["states"] = [
+            tuple(P(dp) for _ in range(3)) if i % 2 == 0
+            else tuple(P(dp) for _ in range(4))
+            for i in range(cfg.n_layers)]
+        return cache
+    if cfg.attn_kind == "mla":
+        cache["c"] = P(None, dp, MODEL_AXIS, None)
+        cache["pe"] = P(None, dp, MODEL_AXIS, None)
+    elif cfg.attn_kind != "none":
+        cache["k"] = P(None, dp, seq_ax, kv_ax, None)
+        cache["v"] = P(None, dp, seq_ax, kv_ax, None)
+    if cfg.family == "hybrid":
+        cache["conv"] = P(None, dp, None, None)
+        cache["h"] = P(None, dp, None, None)
+    if cfg.enc_dec:
+        cache["cross_k"] = P(None, dp, None, kv_ax, None)
+        cache["cross_v"] = P(None, dp, None, kv_ax, None)
+    return cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache: Params,
+                tokens, pos):
+    """One decode step.  tokens: [B,1] int32; pos: scalar int32 (absolute
+    position of the new token; every sequence in the batch is at the same
+    position — continuous-batching offsets live in the serving runtime).
+
+    Returns (logits [B,vocab_pad], new_cache)."""
+    B = tokens.shape[0]
+    x = embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    if cfg.family == "ssm":
+        new_states = []
+        for i, blk in enumerate(params["blocks"]):
+            h = rmsnorm(blk["ln"], x, cfg.norm_eps)
+            fwd = (ssm_mod.mlstm_forward if i % 2 == 0
+                   else ssm_mod.slstm_forward)
+            y, st = fwd(blk["core"], cfg, h, state=cache["states"][i])
+            new_states.append(st)
+            x = x + y
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        logits = logits_from_hidden(params, cfg, x[:, 0])
+        return logits, {"states": new_states}
+
+    ring = cfg.attn_kind == "sliding"
+    windows = layer_windows(cfg, cache_len := _cache_seq_len(cfg, cache))
+
+    def body(carry, xs):
+        x = carry
+        lp, cl, w = xs["params"], xs["cache"], xs.get("window")
+        x = constrain(x, _x_spec())
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        new_cl = dict(cl)
+        if cfg.attn_kind == "mla":
+            a, (cc, pc) = mla_forward(lp["attn"], cfg, h, positions,
+                                      kv_cache=(cl["c"], cl["pe"]),
+                                      cache_index=pos)
+            new_cl["c"], new_cl["pe"] = cc, pc
+        elif cfg.attn_kind == "none":
+            a = 0.0
+        else:
+            a, (kc, vc) = attention_forward(
+                lp["attn"], cfg, h, positions, window=w,
+                kv_cache=(cl["k"], cl["v"]), cache_index=pos, ring=ring)
+            new_cl["k"], new_cl["v"] = kc, vc
+        if cfg.family == "hybrid":
+            m, (conv, hs) = ssm_mod.mamba_forward(
+                lp["mamba"], cfg, h, state=(cl["conv"], cl["h"]))
+            new_cl["conv"], new_cl["h"] = conv, hs
+            mix = jax.nn.sigmoid(lp["alpha"]).astype(x.dtype)
+            a = mix * a + (1.0 - mix) * m
+        x = x + a
+        if cfg.enc_dec:
+            hx = rmsnorm(lp["lnx"], x, cfg.norm_eps)
+            x = x + cross_attention_forward(lp["cross"], cfg, hx,
+                                            (cl["cross_k"], cl["cross_v"]))
+        if "ffn" in lp:
+            h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            if cfg.moe is not None:
+                f, _ = moe_ffn(lp["ffn"], cfg, h2, cfg.act)
+            else:
+                f = ffn(lp["ffn"], h2, cfg.act)
+            x = x + f
+        return x, new_cl
+
+    layer_stack = params["dec_layers"] if cfg.enc_dec else params["layers"]
+    xs = {"params": layer_stack, "cache": cache}
+    if windows is not None:
+        xs["window"] = windows
+    x, new_cache = jax.lax.scan(body, x, xs)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x[:, 0])
+    return logits, new_cache
+
+
+def _cache_seq_len(cfg: ArchConfig, cache: Params) -> int:
+    if cfg.attn_kind == "mla":
+        return cache["c"].shape[2]
+    if "k" in cache:
+        return cache["k"].shape[2]
+    return 0
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: Dict[str, Any],
+            max_seq: int):
+    """Run the full prompt, build the decode cache, return last-token logits.
+
+    For ring-buffer (sliding) archs the prefill writes only the last
+    ``window`` positions into the cache."""
+    hidden, aux = forward(params, cfg, batch, collect_kv=True)
+    B, S = batch["tokens"].shape
+    cache = init_cache(cfg, B, max_seq,
+                       enc_len=batch["frames"].shape[1] if cfg.enc_dec else 0)
+    if cfg.family == "ssm":
+        cache["states"] = aux["states"]
+        logits = logits_from_hidden(params, cfg, hidden[:, -1])
+        return logits, cache
+    if "kv" in aux and aux["kv"] is not None and cfg.attn_kind != "none":
+        k, v = aux["kv"]                              # [L,B,S,kv,hd] each
+        if cfg.attn_kind == "mla":
+            S_c = cache["c"].shape[2]
+            cache["c"] = jax.lax.dynamic_update_slice(
+                cache["c"], k.astype(cache["c"].dtype), (0, 0, 0, 0))
+            cache["pe"] = jax.lax.dynamic_update_slice(
+                cache["pe"], v.astype(cache["pe"].dtype), (0, 0, 0, 0))
+        else:
+            S_c = cache["k"].shape[2]
+            if S_c < S:                               # ring: keep the tail
+                k = k[:, :, S - S_c:]
+                v = v[:, :, S - S_c:]
+                # ring layout: slot = pos % S_c; roll so slots line up
+                shift = (S - S_c) % S_c
+                k = jnp.roll(k, shift, axis=2)
+                v = jnp.roll(v, shift, axis=2)
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    if cfg.family == "hybrid" and aux.get("mstate") is not None:
+        conv, h_state = aux["mstate"]                 # [L,B,K-1,inner], [L,...]
+        cache["conv"] = conv.astype(cache["conv"].dtype)
+        cache["h"] = h_state
+    if cfg.enc_dec:
+        memory = aux["enc_memory"]
+
+        def xkv(lp):
+            return cross_attention_kv(lp["cross"], cfg, memory)
+        ck, cv = jax.vmap(xkv)(params["dec_layers"])
+        cache["cross_k"], cache["cross_v"] = (
+            ck.astype(cache["cross_k"].dtype),
+            cv.astype(cache["cross_v"].dtype))
+    logits = logits_from_hidden(params, cfg, hidden[:, -1])
+    return logits, cache

@@ -1,0 +1,158 @@
+"""AdamW with ZeRO-1 moment sharding and optional int8 gradient compression.
+
+The optimizer is pure-functional (init/apply) so the whole train step jits
+as one program and GSPMD schedules the gradient all-reduce / moment updates
+together (compute-comm overlap falls out of XLA's async collectives; the
+bucketing knob is the remat/scan structure of the backward pass).
+
+ZeRO-1: each moment tensor gets the *parameter's* sharding plus an extra
+``data``-axis sharding on its first evenly-divisible free dim, so optimizer
+state is partitioned across the full (pod, data, model) mesh.  The update
+math is unchanged — GSPMD inserts the reduce-scatter / all-gather pair.
+
+int8 compression: symmetric per-tensor quantization with error feedback
+(residual carried in the optimizer state) for the DP all-reduce — the
+"gradient compression" lever of the scale checklist.  Off by default;
+enabled per-config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import axis_size
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compress_int8: bool = False
+    # wire format of the gradient crossing the DP collective: bf16 halves
+    # the all-reduce/reduce-scatter bytes (moments still accumulate f32).
+    # Off by default (paper-faithful baseline); the optimized dry-run
+    # enables it (EXPERIMENTS.md §Perf HC1-it3).
+    grad_wire_bf16: bool = False
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    warm = cfg.lr_peak * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * \
+        (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params: Params, cfg: AdamWConfig) -> Dict[str, Any]:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros32, params),
+        "nu": jax.tree.map(zeros32, params),
+    }
+    if cfg.compress_int8:
+        state["residual"] = jax.tree.map(zeros32, params)
+    return state
+
+
+def _shard_extra_dim(spec: P, shape) -> P:
+    """Extend a param spec with a ``data``-axis sharding on the first free,
+    evenly-divisible dim (ZeRO-1 partitioning)."""
+    d_sz = axis_size("data")
+    if d_sz <= 1:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = {a for p in parts if p is not None
+            for a in (p if isinstance(p, tuple) else (p,))}
+    if "data" in used:
+        return spec
+    for i, (p, dim) in enumerate(zip(parts, shape)):
+        if p is None and dim % d_sz == 0:
+            parts[i] = "data"
+            return P(*parts)
+    return spec
+
+
+def state_specs(params: Params, param_specs: Params,
+                cfg: AdamWConfig) -> Dict[str, Any]:
+    is_p = lambda x: isinstance(x, P)
+    mom_specs = jax.tree.map(
+        lambda spec, p: _shard_extra_dim(spec, p.shape),
+        param_specs, params, is_leaf=is_p)
+    specs = {"step": P(), "mu": mom_specs, "nu": mom_specs}
+    if cfg.compress_int8:
+        specs["residual"] = mom_specs
+    return specs
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def compress_int8(g, residual):
+    """Symmetric per-tensor int8 quantization with error feedback.
+    Returns (quantized-float value to all-reduce, new residual)."""
+    g = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    deq = q * scale
+    return deq, g - deq
+
+
+def apply(grads: Params, state: Dict[str, Any], params: Params,
+          cfg: AdamWConfig) -> Tuple[Params, Dict[str, Any], Dict[str, Any]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    new_state = {"step": step}
+
+    if cfg.grad_wire_bf16:
+        grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+    if cfg.compress_int8:
+        pairs = jax.tree.map(compress_int8, grads, state["residual"])
+        grads = jax.tree.map(lambda pr: pr[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_state["residual"] = jax.tree.map(
+            lambda pr: pr[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = lr_schedule(cfg, state["step"])
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        step_v = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        newp = p.astype(jnp.float32) - lr * (
+            step_v + cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    leaves = lambda i: jax.tree.map(lambda t: t[i], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_params = leaves(0)
+    new_state["mu"] = leaves(1)
+    new_state["nu"] = leaves(2)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

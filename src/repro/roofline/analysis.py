@@ -1,0 +1,198 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``cost_analysis()`` supplies FLOPs and bytes accessed.  Collective bytes
+are NOT in cost_analysis: we parse the (post-SPMD) HLO text and sum the
+result-shape sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  The parser also returns per-op counts so
+the perf loop can see WHICH collective grew or vanished between iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g.  bf16[64,4096,512]{2,1,0}   or  f32[] (scalar)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over an HLO module.
+
+    HLO lines look like:
+      %all-gather.3 = bf16[8,4096,1024]{...} all-gather(%param.5), ...
+    Tuple-shaped results ((bf16[..], bf16[..])) are summed element-wise.
+    ``-start`` variants (async collectives) are counted; their ``-done``
+    twins are skipped to avoid double counting.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3:]
+        m = re.match(r"(?:\([^=]*?\)|\S+)\s+([\w-]+)", rhs)
+        if not m:
+            continue
+        op = m.group(1)
+        base = op.replace("-start", "")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        shape_part = rhs[:rhs.find(base)]
+        nbytes = _shape_bytes(shape_part)
+        if op.endswith("-start") and base == "collective-permute":
+            # cp-start result tuple repeats in/out buffers; halve
+            nbytes //= 2
+        out[base] += nbytes
+        out["count"] += 1
+    return out
+
+
+@dataclass
+class Roofline:
+    """Cost provenance (calibrated for this container, see EXPERIMENTS.md
+    §Dry-run): XLA:CPU's ``compiled.cost_analysis()`` is per-device AND
+    counts while-loop bodies once (ignoring scan trip counts), so it badly
+    undercounts scanned-layer models.  We therefore take
+
+      hlo_flops / hlo_bytes  from the trip-count-aware jaxpr interpreter
+                             (``jaxpr_cost`` — GLOBAL, pre-partitioning);
+      coll_bytes             from the post-SPMD HLO text with while-body
+                             trip-count scaling (``hlo_loops`` —
+                             PER-DEVICE shapes).
+
+    Terms: compute = flops/(chips*peak); memory = bytes/(chips*HBM_bw);
+    collective = coll_bytes/(links*link_bw).  model_flops is the global
+    6·N·D (train) / 2·N·D (inference) figure."""
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float               # global (jaxpr)
+    hlo_bytes: float               # global (jaxpr)
+    coll_bytes: float              # per device (HLO, loop-scaled)
+    model_flops: float             # global
+    coll_detail: Dict[str, int] = field(default_factory=dict)
+    bytes_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * hw.PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * hw.HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (hw.ICI_BW_PER_LINK * hw.ICI_LINKS)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Step time lower bound if the dominant term fully overlaps the
+        others (the roofline)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / counted FLOPs — how much compiled compute is
+        useful (catches remat recompute and dispatch waste)."""
+        if not self.hlo_flops:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def mfu_at_bound(self) -> float:
+        """Model FLOPs utilization IF the program ran exactly at the
+        dominant-term bound — the roofline fraction §Perf reports."""
+        if not self.t_bound:
+            return 0.0
+        return (self.model_flops / self.chips) / (
+            self.t_bound * hw.PEAK_FLOPS_BF16)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_frac": self.useful_fraction,
+            "mfu_at_bound": self.mfu_at_bound,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float, global_flops: Optional[float] = None,
+            global_bytes: Optional[float] = None,
+            hlo_text: Optional[str] = None) -> Roofline:
+    """Build a Roofline from a compiled executable.
+
+    global_flops/global_bytes: trip-count-aware jaxpr costs (preferred).
+    Falls back to cost_analysis() x chips when absent (undercounts scans —
+    only for quick probes)."""
+    from repro.roofline.hlo_loops import scaled_collective_bytes
+    if global_flops is None or global_bytes is None:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        global_flops = global_flops or float(ca.get("flops", 0.0)) * chips
+        global_bytes = global_bytes or \
+            float(ca.get("bytes accessed", 0.0)) * chips
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    scaled = scaled_collective_bytes(text)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0) +
+                    getattr(ma, "argument_size_in_bytes", 0) +
+                    getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    coll["naive_module_sum"] = int(scaled["naive"])
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=float(global_flops),
+                    hlo_bytes=float(global_bytes),
+                    coll_bytes=float(scaled["scaled"]),
+                    model_flops=model_flops,
+                    coll_detail=coll, bytes_per_device=mem)

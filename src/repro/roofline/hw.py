@@ -1,0 +1,12 @@
+"""TPU v5e-class hardware constants for the roofline analysis."""
+from __future__ import annotations
+
+PEAK_FLOPS_BF16 = 197e12        # per chip, bf16
+PEAK_FLOPS_INT8 = 394e12        # per chip, int8
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (~)
+ICI_LINKS = 4                   # torus links used concurrently (2D)
+VMEM_BYTES = 128 * 2**20
+HBM_BYTES = 16 * 2**30
+
+MXU_DIM = 128                   # systolic array edge; align matmul dims

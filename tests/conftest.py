@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests see the real single CPU device (the dry-run, and only the
+# dry-run, forces 512 host devices — in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs (deliverable (f))."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import transformer as tmod
+from repro.models.layers import pad_vocab
+
+
+def make_batch(cfg, key, B=2, S=32):
+    tk = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tk, "labels": jnp.roll(tk, -1, 1)}
+    if cfg.family == "vlm":
+        batch["patches"] = 0.01 * jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model), jnp.float32)
+    if cfg.enc_dec:
+        batch["frames"] = 0.01 * jax.random.normal(
+            key, (B, cfg.n_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_and_loss(arch_id, rng_key):
+    cfg = get_arch(arch_id).reduced()
+    params = tmod.init_params(rng_key, cfg)
+    batch = make_batch(cfg, rng_key)
+    hidden, aux = tmod.forward(params, cfg, batch)
+    B, S = batch["tokens"].shape
+    assert hidden.shape == (B, S, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(hidden)))
+    loss = tmod.loss_fn(params, cfg, batch, remat=False)
+    assert jnp.isfinite(loss) and loss > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_train_step_grads(arch_id, rng_key):
+    cfg = get_arch(arch_id).reduced()
+    params = tmod.init_params(rng_key, cfg)
+    batch = make_batch(cfg, rng_key)
+    grads = jax.grad(lambda p: tmod.loss_fn(p, cfg, batch, remat=True))(
+        params)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_shapes(arch_id, rng_key):
+    cfg = get_arch(arch_id).reduced()
+    params = tmod.init_params(rng_key, cfg)
+    B, S = 2, 32
+    batch = make_batch(cfg, rng_key, B, S)
+    logits, cache = tmod.prefill(params, cfg, batch, max_seq=S + 8)
+    assert logits.shape == (B, pad_vocab(cfg.vocab_size))
+    logits2, cache2 = tmod.decode_step(
+        params, cfg, cache, jnp.ones((B, 1), jnp.int32), jnp.int32(S))
+    assert logits2.shape == (B, pad_vocab(cfg.vocab_size))
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+    # cache structure preserved
+    assert jax.tree_util.tree_structure(cache) == \
+        jax.tree_util.tree_structure(cache2)
+
+
+@pytest.mark.parametrize("arch_id", ["phi4-mini-3.8b", "gemma2-9b",
+                                     "qwen2-moe-a2.7b", "xlstm-125m",
+                                     "hymba-1.5b", "deepseek-v2-236b",
+                                     "seamless-m4t-medium", "internvl2-26b"])
+def test_decode_matches_forward(arch_id, rng_key):
+    """Prefill(S) + decode(S) must agree with forward on S+1 tokens —
+    the serving path equals the training path (greedy tokens match; allows
+    small numeric divergence between the two attention implementations)."""
+    cfg = get_arch(arch_id).reduced()
+    params = tmod.init_params(rng_key, cfg)
+    B, S = 2, 16
+    batch_full = make_batch(cfg, rng_key, B, S + 1)
+    batch_pre = {k: (v[:, :S] if k in ("tokens", "labels") else v)
+                 for k, v in batch_full.items()}
+    hidden, _ = tmod.forward(params, cfg, batch_full)
+    ref_logits = tmod.logits_from_hidden(params, cfg, hidden[:, -1])
+
+    _, cache = tmod.prefill(params, cfg, batch_pre, max_seq=S + 4)
+    step_logits, _ = tmod.decode_step(
+        params, cfg, cache, batch_full["tokens"][:, S:S + 1], jnp.int32(S))
+    v = cfg.vocab_size
+    ref = ref_logits[:, :v]
+    got = step_logits[:, :v]
+    assert jnp.argmax(ref, -1).tolist() == jnp.argmax(got, -1).tolist() or \
+        float(jnp.max(jnp.abs(ref - got))) < 0.15 * float(
+            jnp.max(jnp.abs(ref)) + 1e-6)
+
+
+def test_param_specs_match_structure(rng_key):
+    for arch_id in ARCH_IDS:
+        cfg = get_arch(arch_id).reduced()
+        params = tmod.init_params(rng_key, cfg)
+        specs = tmod.param_specs(cfg)
+        assert jax.tree_util.tree_structure(
+            params, is_leaf=lambda x: False) == jax.tree_util.tree_structure(
+            specs, is_leaf=lambda x: not isinstance(x, (dict, list)))
+
+
+def test_full_config_param_counts():
+    """Closed-form accounting sanity against the published sizes."""
+    from repro.models.accounting import count_params
+    expect = {
+        "phi4-mini-3.8b": (3.3e9, 4.6e9),
+        "qwen2-72b": (68e9, 76e9),
+        "gemma2-9b": (8.0e9, 11e9),
+        "command-r-plus-104b": (98e9, 112e9),
+        "deepseek-v2-236b": (210e9, 250e9),
+        "qwen2-moe-a2.7b": (13e9, 15.5e9),   # 14.3B total (2.7B active)
+        # our xLSTM block accounting is lean vs the published 125M (no
+        # per-head biases / norm-scales counted): accept 85-180M
+        "xlstm-125m": (0.85e8, 1.8e8),
+    }
+    for aid, (lo, hi) in expect.items():
+        n = count_params(get_arch(aid))
+        assert lo <= n <= hi, (aid, f"{n:.3e}")

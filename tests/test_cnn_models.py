@@ -1,0 +1,42 @@
+"""CNN model tests: reduced networks run, kernel-vs-model agreement, and
+the dataflow engine's layer accounting."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import CNN_CONFIGS
+from repro.models.cnn import (cnn_forward, cnn_input_shape, init_cnn_params,
+                              conv_layer_forward)
+
+
+@pytest.mark.parametrize("name", sorted(CNN_CONFIGS))
+def test_reduced_cnn_forward(name, rng_key):
+    cfg = CNN_CONFIGS[name].reduced()
+    params = init_cnn_params(rng_key, cfg)
+    x = jax.random.randint(rng_key, cnn_input_shape(cfg, 2), -127, 128,
+                           jnp.int8)
+    logits = cnn_forward(params, cfg, x)
+    assert logits.shape[0] == 2 and logits.shape[1] > 0
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_conv_layer_matches_pallas_kernel(rng_key):
+    """The model's conv layer and the Pallas engine produce identical int8
+    activations (same requantization contract)."""
+    from repro.configs.cnn import ConvLayerSpec
+    from repro.kernels.conv2d_int8.ops import conv2d_int8_requant
+    spec = ConvLayerSpec("t", "conv", 3, 3, 8, 16, 1, 12, 12)
+    from repro.models.cnn import init_conv_layer
+    params = init_conv_layer(rng_key, spec)
+    x = jax.random.randint(rng_key, (2, 12, 12, 8), -127, 128, jnp.int8)
+    y_model, _ = conv_layer_forward(params, spec, x)
+    y_kernel = conv2d_int8_requant(x, params["w"], params["w_scale"],
+                                   params["bias"], stride=1, interpret=True)
+    assert bool(jnp.all(y_model == y_kernel))
+
+
+def test_macs_and_traffic_positive():
+    for name, cfg in CNN_CONFIGS.items():
+        assert cfg.total_macs() > 0
+        assert cfg.total_weight_traffic() > cfg.total_weight_bits() // 8, \
+            name                      # traffic >= one full read (out_h >= 1)

@@ -1,0 +1,203 @@
+"""Tests for the paper's core artifacts: HBM model (Fig. 3), Eq. 1/Alg. 1
+placement, Eq. 2 bounds (Fig. 6), and the Fig. 5 deadlock + credit fix."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import CNN_CONFIGS
+from repro.core import bounds, fifo_sim, hbm_model, placement
+
+
+# ---------------------------------------------------------------------------
+# HBM model (Fig. 3)
+# ---------------------------------------------------------------------------
+
+
+def test_efficiency_monotone_in_burst():
+    effs = [hbm_model.read_efficiency(b) for b in (1, 2, 4, 8, 16, 32)]
+    assert all(a <= b for a, b in zip(effs, effs[1:]))
+    # paper: ~50% below burst 4, 83% at 8, 93% at 32
+    assert effs[2] < 0.6
+    assert abs(hbm_model.read_efficiency(8) - 0.83) < 0.02
+    assert abs(hbm_model.read_efficiency(32) - 0.93) < 0.02
+
+
+def test_write_efficiency_below_read():
+    """§III-A: write efficiency peaks ~15 points under read."""
+    for b in (8, 16, 32):
+        assert hbm_model.write_efficiency(b) < hbm_model.read_efficiency(b)
+
+
+def test_latency_drops_with_burst():
+    assert hbm_model.read_latency_ns(32, "avg") <= \
+        hbm_model.read_latency_ns(8, "avg")
+    assert abs(hbm_model.read_latency_ns(32, "avg") - 400) < 50
+
+
+def test_fifo_depth_is_512():
+    """§III-B: covering 1214 ns at 300 MHz needs 364 cycles -> 512 words."""
+    assert hbm_model.min_laststage_fifo_depth(burst=8) == 512
+
+
+def test_effective_bandwidth_279():
+    """§VI-B: 31 PCs x 240 bits @ 300 MHz = 279 GB/s."""
+    assert abs(hbm_model.EFFECTIVE_BW_BYTES / 1e9 - 279) < 1
+
+
+def test_pc_simulator_efficiency_tracks_model():
+    reqs = hbm_model.interleaved_stream(3, 200, burst=8)
+    res = hbm_model.simulate_pc(reqs, burst=8)
+    # words/cycle should be within ~10 points of the measured curve
+    assert abs(res.efficiency - hbm_model.read_efficiency(8)) < 0.12
+    assert set(res.per_consumer_words) == {0, 1, 2}
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 bounds (Fig. 6)
+# ---------------------------------------------------------------------------
+
+
+def test_eq2_bounds_match_paper():
+    """Paper: VGG-16 hw 430 im/s is 78% of its all-HBM bound -> bound ~551;
+    ResNet-50 hw 748 at 68% -> ~1100; ResNet-18 bound ~2400."""
+    b_vgg = bounds.all_hbm_bound_ims(CNN_CONFIGS["vgg16"])
+    b_r50 = bounds.all_hbm_bound_ims(CNN_CONFIGS["resnet50"])
+    b_r18 = bounds.all_hbm_bound_ims(CNN_CONFIGS["resnet18"])
+    assert abs(b_vgg - 551) / 551 < 0.05
+    assert abs(b_r50 - 1100) / 1100 < 0.05
+    assert abs(b_r18 - 2400) / 2400 < 0.10
+
+
+def test_table1_memory_breakdown():
+    """Activations < 35% of memory everywhere; VGG-16 ~1%; shaded rows
+    (ResNet-50, VGG-16) exceed the 140 Mb device."""
+    for name, cfg in CNN_CONFIGS.items():
+        w = cfg.total_weight_bits()
+        a = cfg.total_activation_bits()
+        assert a / (a + w) < 0.35, name
+    assert CNN_CONFIGS["vgg16"].total_activation_bits() / (
+        CNN_CONFIGS["vgg16"].total_weight_bits()
+        + CNN_CONFIGS["vgg16"].total_activation_bits()) < 0.03
+    device_bits = 140e6
+    assert CNN_CONFIGS["resnet50"].total_weight_bits() > device_bits
+    assert CNN_CONFIGS["vgg16"].total_weight_bits() > device_bits
+    assert CNN_CONFIGS["resnet18"].total_weight_bits() < device_bits
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 / Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def _plans(name="resnet50", frac=0.33):
+    cfg = CNN_CONFIGS[name]
+    return placement.allocate_parallelism(
+        cfg, int(bounds.NX2100_TENSOR_BLOCKS * frac))
+
+
+def test_algorithm1_budget_respected():
+    plans = placement.algorithm1(_plans())
+    used = sum(p.chains for p in plans if p.offload)
+    assert used <= hbm_model.USABLE_PCS * placement.CHAINS_PER_PC
+
+
+def test_algorithm1_prefers_high_score():
+    plans = placement.algorithm1(_plans())
+    scores_off = [placement.eq1_score(p) for p in plans if p.offload]
+    scores_on = [placement.eq1_score(p) for p in plans if not p.offload]
+    if scores_off and scores_on:
+        # every offloaded layer scores >= any on-chip layer that would
+        # still have fit in the leftover bandwidth
+        free = hbm_model.USABLE_PCS * placement.CHAINS_PER_PC - \
+            sum(p.chains for p in plans if p.offload)
+        for p in plans:
+            if not p.offload and p.chains <= free and \
+                    placement.eq1_score(p) > 0:
+                assert placement.eq1_score(p) <= max(scores_off) + 1e-9
+
+
+def test_hybrid_keeps_activations_on_chip():
+    """§III-B decision: only weights move; the hybrid selection never
+    counts activations as offloadable."""
+    plans = placement.hybrid_selection(_plans(), bounds.NX2100_M20KS)
+    assert any(not p.offload for p in plans)
+
+
+def test_clockwise_pc_assignment():
+    plans = placement.algorithm1(_plans("vgg16", 0.40))
+    placement.assign_pseudo_channels(plans)
+    seq = [p.pc for p in plans if p.offload]
+    clockwise = list(range(16)) + list(range(31, 15, -1))
+    assert seq == clockwise[:len(seq)]
+
+
+def test_throughput_hybrid_beats_all_hbm():
+    """Fig. 6 headline: the hybrid memory system outperforms all-HBM on
+    every network, ResNet-18 by the largest factor."""
+    gains = {}
+    for name, frac in (("resnet18", .51), ("resnet50", .33), ("vgg16", .4)):
+        plans = _plans(name, frac)
+        for p in plans:
+            p.offload = True
+        placement.assign_pseudo_channels(plans)
+        all_hbm = placement.pipeline_throughput(plans)["images_per_s"]
+        ph = placement.hybrid_selection(plans, bounds.NX2100_M20KS)
+        placement.assign_pseudo_channels(ph)
+        hyb = placement.pipeline_throughput(ph)["images_per_s"]
+        assert hyb >= all_hbm, name
+        gains[name] = hyb / all_hbm
+    assert gains["resnet18"] == max(gains.values())
+
+
+@given(st.integers(2, 40), st.integers(1, 30))
+@settings(max_examples=30, deadline=None)
+def test_algorithm1_property_budget(n_layers, n_pc):
+    """Property: whatever the topology, Algorithm 1 never oversubscribes
+    the chain pool and offload flags are deterministic."""
+    from repro.configs.cnn import ConvLayerSpec
+    layers = tuple(
+        ConvLayerSpec(f"l{i}", "conv", 3, 3, 16 * (1 + i % 4),
+                      16 * (1 + (i + 1) % 4), 1, 32, 32)
+        for i in range(n_layers))
+    from repro.configs.cnn import CNNConfig
+    plans = placement.allocate_parallelism(CNNConfig("x", layers), 500)
+    placement.algorithm1(plans, n_pc=n_pc)
+    used = sum(p.chains for p in plans if p.offload)
+    assert used <= n_pc * placement.CHAINS_PER_PC
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 deadlock / credits
+# ---------------------------------------------------------------------------
+
+
+def test_fig5_ready_valid_deadlocks():
+    out = fifo_sim.demo()
+    assert out["ready_valid"].deadlocked
+    assert not out["credit"].deadlocked
+    assert out["credit"].completed
+
+
+@given(
+    n_layers=st.integers(2, 5),
+    burst=st.sampled_from([2, 4, 8]),
+    bm_depth=st.integers(2, 16),
+    act_depth=st.integers(1, 4),
+    latency=st.integers(1, 30),
+    w0=st.integers(1, 8),
+)
+@settings(max_examples=40, deadline=None)
+def test_credit_mode_never_deadlocks(n_layers, burst, bm_depth, act_depth,
+                                     latency, w0):
+    """§V-A property: credit-based flow control is deadlock-free for ANY
+    topology/sizing in which a burst fits the burst-matching FIFO."""
+    bm_depth = max(bm_depth, burst)        # credits must cover one burst
+    cfg = fifo_sim.SimConfig(
+        n_layers=n_layers, burst=burst, bm_fifo_depth=bm_depth,
+        act_fifo_depth=act_depth, dcfifo_depth=2 * burst,
+        hbm_latency=latency,
+        weights_per_act=tuple([w0] + [1] * (n_layers - 1)),
+        outputs_needed=16)
+    out = fifo_sim.simulate(cfg, "credit",
+                            start_skew=[10 * i for i in range(n_layers)])
+    assert not out.deadlocked
+    assert out.completed

@@ -1,0 +1,35 @@
+"""The multi-pod dry-run as a test: one small cell must lower + compile on
+both production meshes in a subprocess (512 forced host devices — isolated
+from this process, which keeps its single real device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=timeout)
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_cell_compiles(mesh, tmp_path):
+    r = _run(["--arch", "xlstm-125m", "--shape", "decode_32k",
+              "--mesh", mesh, "--out", str(tmp_path / "r.json")])
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "PASS xlstm-125m x decode_32k" in r.stdout
+    assert "roofline:" in r.stdout
+
+
+def test_dryrun_skip_is_documented(tmp_path):
+    r = _run(["--arch", "gemma2-9b", "--shape", "long_500k",
+              "--mesh", "single", "--out", str(tmp_path / "r.json")])
+    assert r.returncode == 0
+    assert "SKIP" in r.stdout and "long_500k" in r.stdout

@@ -1,0 +1,109 @@
+"""Roofline tooling tests: jaxpr cost exactness, HLO collective parsing,
+while-loop trip-count scaling."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline import hw
+from repro.roofline.analysis import Roofline, collective_bytes
+from repro.roofline.hlo_loops import scaled_collective_bytes, \
+    split_computations
+from repro.roofline.jaxpr_cost import cost_of
+
+
+def test_dot_flops_exact():
+    f = lambda a, b: a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = cost_of(f, a, b)
+    assert c["flops"] == 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_by_length():
+    def f(x, ws):
+        def body(x, w):
+            return x @ w, None
+        return jax.lax.scan(body, x, ws)[0]
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+    c = cost_of(f, x, ws)
+    assert c["flops"] >= 10 * 2 * 64**3
+    assert c["flops"] < 11 * 2 * 64**3
+
+
+def test_grad_counts_backward():
+    f = lambda a, b: jnp.sum(a @ b)
+    g = jax.grad(f)
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    fwd = cost_of(f, a, b)["flops"]
+    bwd = cost_of(g, a, b)["flops"]
+    assert bwd >= 2 * fwd * 0.9               # dA and dB matmuls
+
+
+def test_conv_flops():
+    def f(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    x = jax.ShapeDtypeStruct((1, 8, 8, 4), jnp.float32)
+    w = jax.ShapeDtypeStruct((3, 3, 4, 16), jnp.float32)
+    c = cost_of(f, x, w)
+    assert c["flops"] == 2 * (8 * 8 * 16) * (3 * 3 * 4)
+
+
+def test_fused_traffic_excludes_elementwise():
+    f = lambda a: jnp.tanh(a) + 1.0
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    c = cost_of(f, a)
+    assert c["bytes"] == 0.0                  # pure elementwise fuses
+
+
+HLO_SAMPLE = """
+HloModule test
+
+%region_body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %ag = f32[128,256]{1,0} all-gather(%x), dimensions={1}
+  ROOT %t = (s32[], f32[128,256]) tuple(%i, %ag)
+}
+
+%region_cond (p: (s32[], f32[128,256])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[128,256]) -> f32[128,256] {
+  %ar = f32[128,256]{1,0} all-reduce(%a), to_apply=%add
+  %w = (s32[], f32[128,256]) while(%init), condition=%region_cond, body=%region_body
+  ROOT %out = f32[128,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_bytes_module_sum():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["all-gather"] == 128 * 256 * 4
+
+
+def test_while_scaling():
+    out = scaled_collective_bytes(HLO_SAMPLE)
+    base = 128 * 256 * 4
+    assert out["naive"] == 2 * base
+    assert out["scaled"] == base + 12 * base   # AR once + AG x12
+
+
+def test_split_computations():
+    comps = split_computations(HLO_SAMPLE)
+    assert "region_body" in comps and "main" in comps
+
+
+def test_roofline_terms_and_dominance():
+    r = Roofline(arch="x", shape="y", mesh="16x16", chips=256,
+                 hlo_flops=256 * hw.PEAK_FLOPS_BF16,      # 1 s compute
+                 hlo_bytes=256 * hw.HBM_BW * 0.5,         # 0.5 s memory
+                 coll_bytes=hw.ICI_BW_PER_LINK * hw.ICI_LINKS * 0.25,
+                 model_flops=0.8 * 256 * hw.PEAK_FLOPS_BF16)
+    assert r.dominant == "compute"
+    assert r.t_bound == pytest.approx(1.0)
+    assert r.mfu_at_bound == pytest.approx(0.8)
+    assert r.useful_fraction == pytest.approx(0.8)

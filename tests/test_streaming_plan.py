@@ -1,0 +1,90 @@
+"""Tests for the LM-side placement plan (Eq. 1 / Alg. 1 on TPU tiers)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.core import streaming
+from repro.models import transformer as tmod
+from repro.models.layers import set_mesh_axis_sizes
+
+
+@pytest.fixture
+def mesh16x16():
+    set_mesh_axis_sizes({"data": 16, "model": 16})
+    yield
+    set_mesh_axis_sizes({})
+
+
+def _abstract(arch):
+    return jax.eval_shape(lambda: tmod.init_params(jax.random.PRNGKey(0),
+                                                   arch))
+
+
+def test_plan_fits_budget_command_r(mesh16x16):
+    """104B dense cannot replicate over data: the plan must dp-stream
+    enough tensors to fit 16 GiB per chip."""
+    arch = get_arch("command-r-plus-104b")
+    params = _abstract(arch)
+    specs = tmod.param_specs(arch)
+    plan = streaming.plan_placement(params, specs, arch,
+                                    hbm_per_device=16 * 2**30,
+                                    reserve_bytes=6 * 2**30)
+    assert plan.bytes_per_device() <= 10 * 2**30
+    assert len(plan.streamed()) > 0
+
+
+def test_small_arch_stays_replicated(mesh16x16):
+    arch = get_arch("xlstm-125m")
+    params = _abstract(arch)
+    specs = tmod.param_specs(arch)
+    plan = streaming.plan_placement(params, specs, arch)
+    assert len(plan.streamed()) == 0          # 125M fits everywhere
+
+
+def test_moe_experts_stream_first(mesh16x16):
+    """Eq. 1 ordering: routed experts (low uses-per-step) must be chosen
+    for streaming before any always-hot tensor."""
+    arch = get_arch("deepseek-v2-236b")
+    params = _abstract(arch)
+    specs = tmod.param_specs(arch)
+    plan = streaming.plan_placement(params, specs, arch)
+    streamed = {t.path for t in plan.streamed()}
+    assert streamed, "deepseek must stream something"
+    hot_streamed = [p for p in streamed
+                    if "router" in p or "ln" in p or "norm" in p]
+    assert not hot_streamed
+
+
+def test_apply_plan_divisibility(mesh16x16):
+    arch = get_arch("command-r-plus-104b")
+    params = _abstract(arch)
+    specs = tmod.param_specs(arch)
+    plan = streaming.plan_placement(params, specs, arch)
+    new_specs = streaming.apply_plan_to_specs(specs, plan, params)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        new_specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for (kp, leaf), (_, spec) in zip(flat_p, flat_s):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= {"data": 16, "model": 16}.get(a, 1)
+            assert dim % size == 0, (jax.tree_util.keystr(kp), leaf.shape,
+                                     spec)
+
+
+def test_vmem_residency_knapsack(mesh16x16):
+    arch = get_arch("xlstm-125m").reduced()
+    params = tmod.init_params(jax.random.PRNGKey(0), arch)
+    pinned = streaming.plan_vmem_residency(params, arch,
+                                           vmem_budget=64 * 2**10)
+    used = sum(l.size * l.dtype.itemsize
+               for (kp, l) in
+               jax.tree_util.tree_flatten_with_path(params)[0]
+               if pinned[jax.tree_util.keystr(kp)])
+    assert used <= 64 * 2**10

@@ -1,0 +1,36 @@
+"""§IV-C write-path tests: bit-exact packing round trip + register model."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import CNN_CONFIGS
+from repro.core import write_path
+
+
+@given(st.integers(1, 400_000))
+@settings(max_examples=20, deadline=None)
+def test_pack_roundtrip(n):
+    rng = np.random.default_rng(n)
+    w = rng.integers(-127, 128, size=n, dtype=np.int8)
+    frames = write_path.pack_weights_as_images(w)
+    assert frames.shape[1:] == (224, 224, 3)
+    back = write_path.unpack_weights(frames, n)
+    np.testing.assert_array_equal(back, w)
+
+
+def test_registers_saved_over_3000():
+    assert write_path.registers_saved(30) > 3000   # the paper's claim
+
+
+def test_boot_time_reasonable():
+    """VGG-16's 1.2 Gb of weights must load in under a minute at boot
+    (the paper treats the write as non-timing-critical but one-shot)."""
+    vgg_bytes = CNN_CONFIGS["vgg16"].total_weight_bits() // 8
+    t = write_path.boot_time_s(vgg_bytes)
+    assert 0.01 < t < 60.0
+
+
+def test_narrower_is_cheaper_but_slower():
+    assert write_path.write_path_registers(30) < \
+        write_path.write_path_registers(256)
+    assert write_path.boot_time_s(10**8, 30) >= \
+        write_path.boot_time_s(10**8, 256)
