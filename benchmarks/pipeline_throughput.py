@@ -1,0 +1,76 @@
+"""Pipeline-executor benchmark: images/s + stall cycles vs fifo_sim.
+
+Runs the executable mini ResNet-18 through the pipeline executor twice —
+all weights pinned vs the Algorithm 1 hybrid plan — and reports, per plan:
+
+  * wall-clock images/s of the actual JAX execution (interpret-mode Pallas
+    on CPU: a functional emulation, so wall-clock is for *relative*
+    pinned-vs-streamed comparison only, not an FPGA throughput claim);
+  * the §VI analytic throughput model over the same plan;
+  * streamed weight traffic (Eq. 2 words) counted at kernel dispatch;
+  * tail-engine stall cycles predicted by the §V-A credit-mode fifo_sim
+    over the plan's per-row word demands, against the sim's delivered
+    word counts.
+
+  PYTHONPATH=src python benchmarks/pipeline_throughput.py [batch]
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cnn import mini_resnet18
+from repro.core import build_pipeline_plan, fifo_sim
+from repro.models.cnn import cnn_input_shape, init_cnn_params
+from repro.runtime.pipeline import PipelineExecutor
+
+
+def bench(batch: int = 2) -> List[Dict]:
+    cfg = mini_resnet18(hw=32, width=32)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(1),
+                           cnn_input_shape(cfg, batch), -127, 128, jnp.int8)
+
+    hybrid = build_pipeline_plan(cfg, tb_budget=500, bram_m20ks=40)
+    plans = {"pinned": hybrid.with_offload([]), "hybrid": hybrid}
+
+    rows = []
+    for label, plan in plans.items():
+        ex = PipelineExecutor(plan)
+        ex.run(params, x)                          # warm-up / compile
+        t0 = time.perf_counter()
+        _, report = ex.run(params, x)
+        dt = time.perf_counter() - t0
+        row = {
+            "name": f"pipeline/{label}",
+            "streamed_layers": len(plan.streamed),
+            "wallclock_images_per_s": round(batch / dt, 2),
+            "model_images_per_s": round(plan.throughput()["images_per_s"], 1),
+            "hbm_words_streamed": report.total_hbm_words,
+        }
+        if plan.streamed:
+            sim_cfg, scale = plan.sim_config(outputs_needed=8)
+            sim = fifo_sim.simulate(sim_cfg, "credit")
+            row.update({
+                "sim_stall_cycles": sim.stall_cycles,
+                "sim_cycles": sim.cycles,
+                "sim_words_delivered": sum(sim.per_layer_weight_words)
+                * scale,
+                "sim_completed": sim.completed,
+            })
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    batch = int(sys.argv[1]) if len(sys.argv) > 1 else 2
+    for row in bench(batch):
+        print("  ".join(f"{k}={v}" for k, v in row.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -264,6 +264,42 @@ def _mobilenet_v3() -> CNNConfig:
     return CNNConfig("mobilenetv3", tuple(layers))
 
 
+def mini_resnet18(hw: int = 32, width: int = 32) -> CNNConfig:
+    """ResNet-18-topology network sized for *executable* pipeline demos:
+    small enough that the Pallas engines run in interpret mode on CPU, yet
+    with multi-M20K weight buffers so Eq. 1 scores go positive and
+    Algorithm 1 genuinely offloads layers to HBM (the full-size nets would
+    take minutes per image under the interpreter).
+
+    Structure mirrors ``_resnet(18)``: stride-1 3x3 stem (+ the model's
+    maxpool halving), two stages of two basic blocks with a stride-2
+    transition and pwconv downsample, then an fc head.
+    """
+    layers: List[ConvLayerSpec] = []
+    layers.append(ConvLayerSpec("stem", "conv", 3, 3, 3, width, 1, hw, hw))
+    h = w = hw // 2                    # model applies 3x3 maxpool stride 2
+    c_in = width
+    stages = [(width, 2), (width * 2, 2)]
+    for si, (c, blocks) in enumerate(stages):
+        for b in range(blocks):
+            stride = 2 if (si > 0 and b == 0) else 1
+            if stride == 2:
+                h //= 2
+                w //= 2
+            layers.append(ConvLayerSpec(
+                f"s{si}b{b}c0", "conv", 3, 3, c_in, c, stride,
+                h * stride, w * stride))
+            layers.append(ConvLayerSpec(
+                f"s{si}b{b}c1", "conv", 3, 3, c, c, 1, h, w))
+            if stride == 2 or c_in != c:
+                layers.append(ConvLayerSpec(
+                    f"s{si}b{b}ds", "pwconv", 1, 1, c_in, c, stride,
+                    h * stride, w * stride))
+            c_in = c
+    layers.append(ConvLayerSpec("fc", "fc", 1, 1, c_in, 10, 1, 1, 1))
+    return CNNConfig("resnet18-mini", tuple(layers), num_classes=10)
+
+
 CNN_CONFIGS = {
     "resnet18": _resnet(18),
     "resnet50": _resnet(50),

@@ -1,3 +1,5 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from repro.core.schedule import (HBM, PINNED, LayerSchedule,  # noqa: F401
+                                 PipelinePlan, build_pipeline_plan)

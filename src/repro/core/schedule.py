@@ -1,0 +1,204 @@
+"""Executable pipeline schedule — Algorithm 1 fused with FIFO sizing.
+
+The planner pieces each answer one question: ``placement`` decides *which*
+layers stream weights from HBM (Eq. 1 / Algorithm 1) and how much
+parallelism each engine gets; ``hbm_model`` sizes the FIFOs that make the
+streams safe (§III-B/§IV-A); ``fifo_sim`` proves the flow control live
+(§V-A).  ``build_pipeline_plan`` fuses all three into one *executable*
+schedule: per layer, the weight tier (pinned vs HBM-streamed), the
+pseudo-channel, the burst length, and the FIFO/double-buffer depths the
+runtime executor (``repro.runtime.pipeline``) instantiates as Pallas
+kernel configurations.
+
+Units: weight traffic is counted in 80-bit tensor-chain words (the
+granularity a pseudo-channel feeds, §III-B); a streamed layer re-reads its
+kernel once per output row (Eq. 2), so
+``weight_words_per_image = weight_words_per_row * out_h``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.cnn import CNNConfig, ConvLayerSpec
+from repro.core import bounds, fifo_sim, hbm_model, placement
+from repro.core.placement import CHAIN_BITS, LayerPlan
+
+PINNED = "pinned"                 # weights resident on chip (M20K / VMEM)
+HBM = "hbm"                       # weights double-buffer-streamed from HBM
+
+
+@dataclass(frozen=True)
+class LayerSchedule:
+    """Everything the runtime needs to instantiate one layer engine."""
+
+    spec: ConvLayerSpec
+    mode: str                     # PINNED | HBM
+    p_i: int
+    p_o: int
+    pc: Optional[int]             # pseudo-channel when streamed
+    burst: int                    # HBM words per read request
+    laststage_fifo_depth: int     # words; §IV-A latency-covering FIFO
+    bm_fifo_words: int            # burst-matching SCFIFO depth
+    n_buffers: int                # executable double-buffer ring depth
+
+    @property
+    def streamed(self) -> bool:
+        return self.mode == HBM
+
+    @property
+    def weight_words_per_row(self) -> int:
+        """80-bit chain words one weight re-read costs (Eq. 2 numerator)."""
+        return -(-self.spec.weight_bits(8) // CHAIN_BITS)
+
+    @property
+    def weight_words_per_image(self) -> int:
+        """Streamed layers re-read kernels once per output row (Eq. 2)."""
+        return self.weight_words_per_row * self.spec.out_h
+
+
+@dataclass(frozen=True)
+class PipelinePlan:
+    """The fused, executable schedule for one CNN."""
+
+    cfg: CNNConfig
+    schedules: Tuple[LayerSchedule, ...]
+    placements: Tuple[LayerPlan, ...]     # Algorithm 1 output (read-only)
+    burst: int
+    n_pc: int
+
+    def schedule_for(self, name: str) -> LayerSchedule:
+        for s in self.schedules:
+            if s.spec.name == name:
+                return s
+        raise KeyError(name)
+
+    @property
+    def streamed(self) -> Tuple[LayerSchedule, ...]:
+        return tuple(s for s in self.schedules if s.streamed)
+
+    @property
+    def pinned(self) -> Tuple[LayerSchedule, ...]:
+        return tuple(s for s in self.schedules if not s.streamed)
+
+    @property
+    def streamed_names(self) -> Tuple[str, ...]:
+        return tuple(s.spec.name for s in self.streamed)
+
+    def hbm_words_per_image(self) -> Dict[str, int]:
+        """Eq. 2 weight traffic per image, per streamed layer."""
+        return {s.spec.name: s.weight_words_per_image for s in self.streamed}
+
+    def throughput(self) -> Dict[str, float]:
+        """The §VI throughput model over this plan's placements."""
+        return placement.pipeline_throughput(
+            self.placements, burst=self.burst, n_pc=self.n_pc)
+
+    # -- fifo_sim bridge ----------------------------------------------------
+
+    def sim_config(self, outputs_needed: int = 32,
+                   word_scale: Optional[int] = None
+                   ) -> Tuple[fifo_sim.SimConfig, int]:
+        """Map the streamed layers onto the §V-A weight-distribution sim:
+        engines in pipeline order share one DCFIFO, each consuming
+        ``weight_words_per_row`` words per activation (one activation ==
+        one output row).  ``word_scale`` divides word counts so big layers
+        simulate quickly (auto-picked to keep <=64 words/act); returns
+        (config, scale) so callers can rescale totals back."""
+        streamed = self.streamed
+        if not streamed:
+            raise ValueError("plan streams no layers; nothing to simulate")
+        wpr = [s.weight_words_per_row for s in streamed]
+        if word_scale is None:
+            word_scale = max(1, max(wpr) // 64)
+        wpa = tuple(max(1, w // word_scale) for w in wpr)
+        lat_cycles = max(1, int(hbm_model.read_latency_ns(self.burst, "avg")
+                                * hbm_model.FABRIC_MHZ / 1e3))
+        bm_depth = max(hbm_model.burst_matching_fifo_words(self.burst),
+                       self.burst)
+        cfg = fifo_sim.SimConfig(
+            n_layers=len(streamed),
+            burst=self.burst,
+            bm_fifo_depth=bm_depth,
+            act_fifo_depth=2,
+            dcfifo_depth=max(2 * self.burst, 16),
+            hbm_latency=lat_cycles,
+            weights_per_act=wpa,
+            outputs_needed=outputs_needed,
+        )
+        return cfg, word_scale
+
+    def predict_stalls(self, outputs_needed: int = 32,
+                       word_scale: Optional[int] = None
+                       ) -> fifo_sim.SimOutcome:
+        """Credit-mode discrete-event prediction of tail-engine stalls for
+        the streamed subset (the §V-A liveness + §IV-A sizing check)."""
+        cfg, _ = self.sim_config(outputs_needed, word_scale)
+        return fifo_sim.simulate(cfg, "credit")
+
+    # -- overrides ----------------------------------------------------------
+
+    def with_offload(self, names: Sequence[str]) -> "PipelinePlan":
+        """Plan with the offload set forced to exactly ``names`` — used by
+        tests and demos to exercise the streamed path on configs whose
+        Eq. 1 scores keep everything on chip."""
+        names = set(names)
+        unknown = names - {s.spec.name for s in self.schedules}
+        if unknown:
+            raise KeyError(sorted(unknown))
+        new_places = []
+        for p in self.placements:
+            q = dataclasses.replace(p)
+            q.offload = p.spec.name in names
+            q.pc = None
+            new_places.append(q)
+        placement.assign_pseudo_channels(new_places, n_pc=self.n_pc)
+        scheds = tuple(
+            dataclasses.replace(
+                s, mode=HBM if s.spec.name in names else PINNED,
+                pc=q.pc)
+            for s, q in zip(self.schedules, new_places))
+        return dataclasses.replace(self, schedules=scheds,
+                                   placements=tuple(new_places))
+
+
+def build_pipeline_plan(cfg: CNNConfig, *,
+                        tb_budget: Optional[int] = None,
+                        bram_m20ks: Optional[int] = None,
+                        burst: int = 8,
+                        n_pc: int = hbm_model.USABLE_PCS,
+                        n_buffers: int = 2) -> PipelinePlan:
+    """Compile a CNN into an executable pipeline schedule.
+
+    1. HPIPE balancing allocates (p_i, p_o) under ``tb_budget`` AI-TBs;
+    2. hybrid selection (Eq. 1 order under the chain-bandwidth budget)
+       picks the HBM-streamed set until on-chip memory fits ``bram_m20ks``;
+    3. clockwise pseudo-channel assignment (§V-B);
+    4. FIFO depths from the measured HBM latency/efficiency (§III/IV).
+
+    Defaults model the paper's Stratix 10 NX2100 at half AI-TB utilization.
+    """
+    if tb_budget is None:
+        tb_budget = bounds.NX2100_TENSOR_BLOCKS // 2
+    if bram_m20ks is None:
+        bram_m20ks = bounds.NX2100_M20KS
+    plans = placement.allocate_parallelism(cfg, tb_budget)
+    plans = placement.hybrid_selection(plans, bram_m20ks, n_pc=n_pc,
+                                       burst=burst)
+    placement.assign_pseudo_channels(plans, n_pc=n_pc)
+
+    laststage = hbm_model.min_laststage_fifo_depth(burst)
+    bm_words = hbm_model.burst_matching_fifo_words(burst)
+    schedules = tuple(
+        LayerSchedule(
+            spec=p.spec,
+            mode=HBM if p.offload else PINNED,
+            p_i=p.p_i, p_o=p.p_o, pc=p.pc,
+            burst=burst,
+            laststage_fifo_depth=laststage,
+            bm_fifo_words=bm_words,
+            n_buffers=n_buffers,
+        ) for p in plans)
+    return PipelinePlan(cfg=cfg, schedules=schedules,
+                        placements=tuple(plans), burst=burst, n_pc=n_pc)

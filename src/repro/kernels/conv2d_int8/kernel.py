@@ -11,14 +11,25 @@ chains.  The TPU mapping (DESIGN.md §2):
                               k_h rows — activations stay in the fast tier)
   full-width parallelism   -> each grid step computes one whole output row;
                               the W_out dim rides the MXU/VPU lanes
-  weight broadcast         -> the [k_h*k_w*C, C_out] weight matrix stays in
-                              VMEM across the row sweep (pinned tier) —
-                              streaming weights belongs to stream_matmul
   int8 x int8 -> int32     -> jnp.dot with preferred_element_type=int32
                               (the AI-TB dot chains)
 
 Grid: (B, H_out).  Input is pre-padded in the ops wrapper so the kernel has
 no boundary conditionals (stride handled by strided static slices).
+
+Two weight tiers, selected by the placement plan (core/schedule.py):
+
+``_conv_kernel``         pinned: W delivered once into VMEM by the grid
+                         pipeline and reused for every output row — the
+                         on-chip M20K weight buffer.
+``_conv_stream_kernel``  HBM-streamed: W stays in ``ANY`` (HBM) memory
+                         space and its (i, j) tap blocks are DMA'd through
+                         an ``n_buffers``-deep VMEM ring *once per output
+                         row* — Eq. 2's "kernels are re-read once per
+                         output line".  The ring is the last-stage FIFO;
+                         reusing a slot only after its previous occupant
+                         was consumed is the credit discipline of §V-A
+                         (same pattern as ``stream_matmul_manual``).
 """
 from __future__ import annotations
 
@@ -29,36 +40,80 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
 
-def _conv_kernel(x_hbm_ref, w_ref, o_ref, rows_buf, sem, *,
-                 k_h: int, k_w: int, stride: int, w_out: int):
+
+def _row_slice(rows_buf, i: int, j: int, stride: int, w_out: int):
+    """Strided width slice of line-buffer row i: cols j, j+s, ..."""
+    c_in = rows_buf.shape[-1]
+    return jax.lax.slice(
+        rows_buf[i], (j, 0), (j + (w_out - 1) * stride + 1, c_in),
+        (stride, 1))                                      # [w_out, C]
+
+
+def _fill_line_buffer(x_hbm_ref, rows_buf, sem, *, k_h: int, stride: int):
+    """DMA the k_h input rows for this (batch, output-row) grid step."""
     b = pl.program_id(0)
     r = pl.program_id(1)
-
-    # line buffer refill: DMA the k_h input rows for this output row
     pltpu.make_async_copy(
         x_hbm_ref.at[b, pl.ds(r * stride, k_h)], rows_buf, sem).start()
     pltpu.make_async_copy(
         x_hbm_ref.at[b, pl.ds(r * stride, k_h)], rows_buf, sem).wait()
 
-    c_in = rows_buf.shape[-1]
+
+def _conv_kernel(x_hbm_ref, w_ref, o_ref, rows_buf, sem, *,
+                 k_h: int, k_w: int, stride: int, w_out: int):
+    _fill_line_buffer(x_hbm_ref, rows_buf, sem, k_h=k_h, stride=stride)
     acc = jnp.zeros((w_out, o_ref.shape[-1]), jnp.int32)
     for i in range(k_h):
         for j in range(k_w):
-            # strided width slice: columns j, j+s, ..., j+(w_out-1)s
-            cols = jax.lax.slice(
-                rows_buf[i], (j, 0), (j + (w_out - 1) * stride + 1, c_in),
-                (stride, 1))                                  # [w_out, C]
-            wij = w_ref[i, j]                                 # [C, C_out]
+            cols = _row_slice(rows_buf, i, j, stride, w_out)
+            wij = w_ref[i, j]                             # [C, C_out]
             acc = acc + jnp.dot(cols, wij,
                                 preferred_element_type=jnp.int32)
     o_ref[0, 0] = acc
 
 
+def _conv_stream_kernel(x_hbm_ref, w_hbm_ref, o_ref, rows_buf, w_buf,
+                        row_sem, w_sems, *, k_h: int, k_w: int, stride: int,
+                        w_out: int, n_buffers: int):
+    """HBM-streamed weights: per output row the k_h*k_w weight taps flow
+    HBM -> n_buffers-deep VMEM ring -> MACs, double-buffered so tap t+1's
+    DMA overlaps tap t's compute."""
+    _fill_line_buffer(x_hbm_ref, rows_buf, row_sem, k_h=k_h, stride=stride)
+
+    taps = [(i, j) for i in range(k_h) for j in range(k_w)]
+    nb = min(n_buffers, len(taps))
+
+    def dma(t: int):
+        i, j = taps[t]
+        return pltpu.make_async_copy(
+            w_hbm_ref.at[i, j], w_buf.at[t % nb], w_sems.at[t % nb])
+
+    # warm-up: fill the prefetch window (issue the address stream ahead)
+    for t in range(nb):
+        dma(t).start()
+
+    acc = jnp.zeros((w_out, o_ref.shape[-1]), jnp.int32)
+    for t, (i, j) in enumerate(taps):
+        dma(t).wait()                        # freeze until the burst lands
+        cols = _row_slice(rows_buf, i, j, stride, w_out)
+        acc = acc + jnp.dot(cols, w_buf[t % nb],
+                            preferred_element_type=jnp.int32)
+        if t + nb < len(taps):               # dequeue returns the credit
+            dma(t + nb).start()
+    o_ref[0, 0] = acc
+
+
 def conv2d_int8_kernel(x_padded, w, *, stride: int = 1,
+                       stream: bool = False, n_buffers: int = 2,
                        interpret: bool = False):
     """x_padded: [B, H_pad, W_pad, C] int8 (already SAME-padded);
     w: [k_h, k_w, C, C_out] int8.  Returns [B, H_out, W_out, C_out] int32.
+
+    ``stream=False`` pins W in VMEM for the whole row sweep (on-chip tier);
+    ``stream=True`` leaves W in HBM and re-reads it once per output row
+    through an ``n_buffers``-deep double-buffer ring (HBM tier).
     """
     B, H_pad, W_pad, C = x_padded.shape
     k_h, k_w, C2, C_out = w.shape
@@ -66,21 +121,47 @@ def conv2d_int8_kernel(x_padded, w, *, stride: int = 1,
     H_out = (H_pad - k_h) // stride + 1
     W_out = (W_pad - k_w) // stride + 1
     grid = (B, H_out)
+    common = dict(k_h=k_h, k_w=k_w, stride=stride, w_out=W_out)
+    out_spec = pl.BlockSpec((1, 1, W_out, C_out), lambda b, r: (b, r, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((B, H_out, W_out, C_out), jnp.int32)
+    line_buffer = pltpu.VMEM((k_h, W_pad, C), jnp.int8)
+
+    if not stream:
+        return pl.pallas_call(
+            functools.partial(_conv_kernel, **common),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pl.ANY),  # activations in HBM
+                pl.BlockSpec((k_h, k_w, C, C_out), lambda b, r: (0, 0, 0, 0)),
+            ],
+            out_specs=out_spec,
+            out_shape=out_shape,
+            scratch_shapes=[
+                line_buffer,
+                pltpu.SemaphoreType.DMA,
+            ],
+            interpret=interpret,
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "arbitrary")),
+        )(x_padded, w)
+
+    nb = min(n_buffers, k_h * k_w)
     return pl.pallas_call(
-        functools.partial(_conv_kernel, k_h=k_h, k_w=k_w, stride=stride,
-                          w_out=W_out),
+        functools.partial(_conv_stream_kernel, n_buffers=nb, **common),
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),      # activations in HBM
-            pl.BlockSpec((k_h, k_w, C, C_out), lambda b, r: (0, 0, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),      # weights STAY in HBM
         ],
-        out_specs=pl.BlockSpec((1, 1, W_out, C_out), lambda b, r: (b, r, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H_out, W_out, C_out), jnp.int32),
+        out_specs=out_spec,
+        out_shape=out_shape,
         scratch_shapes=[
-            pltpu.VMEM((k_h, W_pad, C), jnp.int8),     # the line buffer
+            line_buffer,
+            pltpu.VMEM((nb, C, C_out), jnp.int8),   # the last-stage FIFO
             pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((nb,)),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(x_padded, w)

@@ -1,4 +1,11 @@
-"""Jit'd wrapper: SAME padding + requantization around the Pallas conv."""
+"""Jit'd wrapper: SAME padding + requantization around the Pallas conv.
+
+``stream=True`` selects the HBM-streamed weight path (W re-read once per
+output row through a double-buffered VMEM ring); the placement plan
+(core/schedule.py) flips that switch per layer, the way the H2PIPE
+compiler instantiates either an on-chip weight buffer or an HBM FIFO
+chain per layer engine.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels.conv2d_int8.kernel import conv2d_int8_kernel
 from repro.kernels.conv2d_int8.ref import conv2d_int8_ref
+from repro.kernels.quant import requant_epilogue
 
 
 def _same_pad(x, k_h, k_w, stride):
@@ -20,22 +28,28 @@ def _same_pad(x, k_h, k_w, stride):
                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
-def conv2d_int8(x, w, *, stride: int = 1, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("stride", "stream", "n_buffers",
+                                             "interpret"))
+def conv2d_int8(x, w, *, stride: int = 1, stream: bool = False,
+                n_buffers: int = 2, interpret: bool = False):
     """SAME conv, int8 in / int32 out, via the line-buffer Pallas kernel."""
     k_h, k_w = w.shape[:2]
     xp = _same_pad(x, k_h, k_w, stride)
-    return conv2d_int8_kernel(xp, w, stride=stride, interpret=interpret)
+    return conv2d_int8_kernel(xp, w, stride=stride, stream=stream,
+                              n_buffers=n_buffers, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
+@functools.partial(jax.jit, static_argnames=("act_scale", "stride", "relu",
+                                             "stream", "n_buffers",
+                                             "interpret"))
 def conv2d_int8_requant(x, w, w_scale, bias, act_scale: float = 0.05, *,
                         stride: int = 1, relu: bool = True,
+                        stream: bool = False, n_buffers: int = 2,
                         interpret: bool = False):
     """Full HPIPE layer engine: conv + per-channel dequant + bias + relu +
     requantize to int8 for the next engine (models/cnn.py contract)."""
-    y = conv2d_int8(x, w, stride=stride, interpret=interpret)
-    y = y.astype(jnp.float32) * (w_scale * act_scale) + bias
-    if relu:
-        y = jax.nn.relu(y)
-    return jnp.clip(jnp.round(y / act_scale), -127, 127).astype(jnp.int8)
+    y = conv2d_int8(x, w, stride=stride, stream=stream, n_buffers=n_buffers,
+                    interpret=interpret)
+    y_q, _ = requant_epilogue(y, w_scale, bias, act_scale=act_scale,
+                              relu=relu)
+    return y_q

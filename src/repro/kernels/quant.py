@@ -1,0 +1,24 @@
+"""The single requantization epilogue every int8 layer engine shares.
+
+HPIPE's layer contract (models/cnn.py): int32 conv/matmul accumulator ->
+per-output-channel dequant + bias -> optional relu -> requantize to int8
+for the next engine.  Bit-identity between the functional reference, the
+Pallas conv engines, and the fc matmul path depends on all of them running
+THIS function (inside their own jit) — round-to-nearest ties flip if the
+float ops are duplicated and drift apart.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def requant_epilogue(y, w_scale, bias, act_scale: float = 0.05,
+                     relu: bool = True):
+    """y: int32 accumulator [..., C_out].  Returns (int8 requantized,
+    float32 pre-quant activations)."""
+    y = y.astype(jnp.float32) * (w_scale * act_scale) + bias
+    if relu:
+        y = jax.nn.relu(y)
+    y_q = jnp.clip(jnp.round(y / act_scale), -127, 127).astype(jnp.int8)
+    return y_q, y

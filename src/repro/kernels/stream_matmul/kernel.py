@@ -26,7 +26,8 @@ Two implementations:
     semaphores.  ``n_buffers`` is the paper's FIFO-depth knob — benchmarks
     sweep it like Table II sweeps burst length.
 
-Both accumulate in f32 scratch over the K grid dimension and support a
+Both accumulate over the K grid dimension in scratch — f32 for float
+inputs, exact int32 for int8 inputs (the MXU contract) — and support a
 ``pinned`` mode in the ops wrapper (whole W resident in VMEM: the paper's
 on-chip weight buffer).
 """
@@ -40,10 +41,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 
 # ---------------------------------------------------------------------------
 # grid-pipelined version (Pallas auto double-buffering)
 # ---------------------------------------------------------------------------
+
+
+def _acc_dtype(out_dtype):
+    """int8 inputs accumulate exactly in int32 (the MXU contract and the
+    bit-identity guarantee for wide fc heads: sums exceed f32's 2^24);
+    float inputs accumulate in f32."""
+    return jnp.int32 if out_dtype == jnp.int32 else jnp.float32
 
 
 def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
@@ -54,7 +64,7 @@ def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
-                            preferred_element_type=jnp.float32)
+                            preferred_element_type=acc_ref.dtype)
 
     @pl.when(k == nk - 1)
     def _store():
@@ -84,9 +94,9 @@ def stream_matmul_kernel(x, w, *, bm: int = 128, bk: int = 512,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bm, bn), _acc_dtype(out_dtype))],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(x, w)
 
@@ -118,12 +128,14 @@ def _mm_manual_kernel(x_ref, w_hbm_ref, o_ref, w_buf, sems, *,
     for s in range(min(n_buffers, nk)):
         dma(s, s).start()
 
+    acc_dtype = _acc_dtype(o_ref.dtype)
+
     def body(k, acc):
         slot = jax.lax.rem(k, n_buffers)
         dma(k, slot).wait()                            # freeze until landed
         xk = jax.lax.dynamic_slice_in_dim(x_ref[...], k * bk, bk, axis=1)
         acc = acc + jnp.dot(xk, w_buf[slot],
-                            preferred_element_type=jnp.float32)
+                            preferred_element_type=acc_dtype)
         # dequeue returns the credit: reuse the slot for k + n_buffers
         nxt = k + n_buffers
 
@@ -133,7 +145,7 @@ def _mm_manual_kernel(x_ref, w_hbm_ref, o_ref, w_buf, sems, *,
         return acc
 
     acc = jax.lax.fori_loop(
-        0, nk, body, jnp.zeros(o_ref.shape, jnp.float32))
+        0, nk, body, jnp.zeros(o_ref.shape, acc_dtype))
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
@@ -168,6 +180,6 @@ def stream_matmul_manual(x, w, *, bm: int = 128, bk: int = 512,
             pltpu.SemaphoreType.DMA((n_buffers,)),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
     )(x, w)

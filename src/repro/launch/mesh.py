@@ -10,16 +10,27 @@ from __future__ import annotations
 from typing import Dict, Optional, Tuple
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
 
 from repro.models.layers import set_mesh_axis_sizes
+
+
+def compat_make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types where the installed
+    jax supports them (``jax.sharding.AxisType`` only exists in newer
+    releases; older versions are Auto-only, so omitting it is equivalent)."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    mesh = jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    mesh = compat_make_mesh(shape, axes)
     set_mesh_axis_sizes(dict(zip(axes, shape)))
     return mesh
 
@@ -30,8 +41,7 @@ def make_local_mesh(model: int = 1, data: Optional[int] = None) -> Mesh:
     n = jax.device_count()
     data = data or (n // model)
     assert data * model == n, (data, model, n)
-    mesh = jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    mesh = compat_make_mesh((data, model), ("data", "model"))
     set_mesh_axis_sizes({"data": data, "model": model})
     return mesh
 

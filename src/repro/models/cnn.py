@@ -14,13 +14,15 @@ kernel implements the same contract.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.cnn import CNNConfig, ConvLayerSpec
+from repro.kernels.quant import requant_epilogue
 from repro.models.layers import maybe_axis, MODEL_AXIS
 
 Params = Dict[str, Any]
@@ -54,9 +56,15 @@ def conv_layer_specs(spec: ConvLayerSpec) -> Params:
     return {"w": P(None, None, None, ax), "w_scale": P(ax), "bias": P(ax)}
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "act_scale", "relu"))
 def conv_layer_forward(params: Params, spec: ConvLayerSpec, x,
                        act_scale: float = 0.05, relu: bool = True):
-    """x: [B,H,W,C] int8.  Returns int8 activations (requantized)."""
+    """x: [B,H,W,C] int8.  Returns int8 activations (requantized).
+
+    Jitted (spec is a hashable frozen dataclass) so the dequant/requant
+    epilogue compiles to the same fused float ops as the Pallas engines —
+    keeping the model path and the kernel path bit-identical around
+    round-to-nearest ties."""
     feature_group_count = spec.c_in if spec.kind == "dwconv" else 1
     pad = "SAME" if spec.kind != "fc" else "VALID"
     y = jax.lax.conv_general_dilated(
@@ -66,12 +74,9 @@ def conv_layer_forward(params: Params, spec: ConvLayerSpec, x,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
         feature_group_count=feature_group_count,
         preferred_element_type=jnp.int32)
-    y = y.astype(jnp.float32) * (params["w_scale"] * act_scale) + params["bias"]
-    if relu:
-        y = jax.nn.relu(y)
-    # requantize to int8 for the next layer engine
-    y_q = jnp.clip(jnp.round(y / act_scale), -127, 127).astype(jnp.int8)
-    return y_q, y
+    # requantize to int8 for the next layer engine (the shared epilogue)
+    return requant_epilogue(y, params["w_scale"], params["bias"],
+                            act_scale=act_scale, relu=relu)
 
 
 def init_cnn_params(key, cfg: CNNConfig) -> Params:
@@ -87,14 +92,37 @@ def _is_residual_add(cfg: CNNConfig, idx: int) -> bool:
     return cfg.name.startswith("resnet")
 
 
-def cnn_forward(params: Params, cfg: CNNConfig, images) -> jnp.ndarray:
-    """Plain feed-forward execution (the functional reference; the dataflow
-    executor in core/dataflow.py runs the same layers as a pipeline).
+# engine(spec, layer_params, x, relu) -> Optional[(y_q, y_float)].  A layer
+# engine dispatches one layer to a hardware path (Pallas kernels, per the
+# placement plan); returning None falls back to the jnp reference path.
+LayerEngine = Callable[[ConvLayerSpec, Params, jnp.ndarray, bool],
+                       Optional[Tuple[jnp.ndarray, Optional[jnp.ndarray]]]]
+
+
+def cnn_forward(params: Params, cfg: CNNConfig, images,
+                engine: Optional[LayerEngine] = None) -> jnp.ndarray:
+    """Plain feed-forward execution (the functional reference; the pipeline
+    executor in runtime/pipeline.py runs the same layers through the Pallas
+    engines by passing ``engine``).
 
     images: [B,224,224,3] (or reduced) int8.  Returns logits [B,classes].
     Residual/downsample wiring for ResNets is reconstructed from the layer
     names emitted by the config builders (``s{i}b{j}c{k}`` / ``...ds``).
+
+    ``engine``: per-layer dispatch hook.  When provided, each conv/fc layer
+    is offered to the engine first (which routes it to a pinned or
+    HBM-streamed Pallas kernel per the placement plan); layers the engine
+    declines (returns None for, e.g. depthwise convs) run the jnp path, so
+    topology wiring lives in exactly one place.
     """
+
+    def apply_layer(spec: ConvLayerSpec, x, relu: bool = True):
+        if engine is not None:
+            out = engine(spec, params[spec.name], x, relu)
+            if out is not None:
+                return out
+        return conv_layer_forward(params[spec.name], spec, x, relu=relu)
+
     x = images
     layers = list(cfg.layers)
     i = 0
@@ -104,7 +132,7 @@ def cnn_forward(params: Params, cfg: CNNConfig, images) -> jnp.ndarray:
         spec = layers[i]
         name = spec.name
         if name == "stem":
-            x, _ = conv_layer_forward(params[name], spec, x)
+            x, _ = apply_layer(spec, x)
             if cfg.name.startswith("resnet"):
                 # 3x3 maxpool stride 2
                 x = -jax.lax.reduce_window(
@@ -126,11 +154,9 @@ def cnn_forward(params: Params, cfg: CNNConfig, images) -> jnp.ndarray:
             h = x
             for ci, cspec in enumerate(convs):
                 last = ci == len(convs) - 1
-                h, _ = conv_layer_forward(params[cspec.name], cspec, h,
-                                          relu=not last)
+                h, _ = apply_layer(cspec, h, relu=not last)
             if ds:
-                identity, _ = conv_layer_forward(params[ds[0].name], ds[0],
-                                                 identity, relu=False)
+                identity, _ = apply_layer(ds[0], identity, relu=False)
             y = h.astype(jnp.int32) + identity.astype(jnp.int32)
             x = jnp.clip(y, -127, 127).astype(jnp.int8)
             x = jnp.where(x > 0, x, 0)                      # relu on int8
@@ -142,12 +168,12 @@ def cnn_forward(params: Params, cfg: CNNConfig, images) -> jnp.ndarray:
                 x = jnp.mean(x.astype(jnp.float32), axis=(1, 2), keepdims=True)
                 x = jnp.clip(jnp.round(x / 0.05), -127, 127).astype(jnp.int8)
             last = i == len(layers) - 1
-            x, y_f = conv_layer_forward(params[name], spec, x, relu=not last)
+            x, y_f = apply_layer(spec, x, relu=not last)
             if last:
                 return y_f.reshape(y_f.shape[0], -1)
             i += 1
             continue
-        x, _ = conv_layer_forward(params[name], spec, x)
+        x, _ = apply_layer(spec, x)
         i += 1
     # no explicit fc tail (shouldn't happen) — pool and return
     return jnp.mean(x.astype(jnp.float32), axis=(1, 2))

@@ -1,8 +1,20 @@
 import os
+import sys
 
 # Smoke tests see the real single CPU device (the dry-run, and only the
 # dry-run, forces 512 host devices — in its own process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# ``hypothesis`` is optional: when absent, register a deterministic stub so
+# the property tests collect and replay fixed explicit cases instead
+# (tests/_hypothesis_stub.py documents the semantics).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install(sys.modules)
 
 import jax
 import pytest

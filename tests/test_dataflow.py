@@ -35,9 +35,9 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.core.dataflow import split_stages, pipeline_apply, \\
         gpipe_train_step
+    from repro.launch.mesh import compat_make_mesh
 
-    mesh = jax.make_mesh((8,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((8,), ("model",))
     L, d = 16, 8
     key = jax.random.PRNGKey(0)
     Ws = jax.random.normal(key, (L, d, d)) * 0.1
