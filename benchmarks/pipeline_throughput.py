@@ -1,59 +1,74 @@
-"""Pipeline-executor benchmark: images/s + stall cycles vs fifo_sim.
+"""Pipeline benchmark: images/s + stall cycles vs fifo_sim, as JSON.
 
-Runs the executable mini ResNet-18 through the pipeline executor twice —
+Runs the executable mini ResNet-18 through the compiled pipeline twice —
 all weights pinned vs the Algorithm 1 hybrid plan — and reports, per plan:
 
   * wall-clock images/s of the actual JAX execution (interpret-mode Pallas
     on CPU: a functional emulation, so wall-clock is for *relative*
     pinned-vs-streamed comparison only, not an FPGA throughput claim);
   * the §VI analytic throughput model over the same plan;
-  * streamed weight traffic (Eq. 2 words) counted at kernel dispatch;
+  * streamed weight traffic (Eq. 2 words) counted at engine dispatch;
   * tail-engine stall cycles predicted by the §V-A credit-mode fifo_sim
     over the plan's per-row word demands, against the sim's delivered
     word counts.
 
-  PYTHONPATH=src python benchmarks/pipeline_throughput.py [batch]
+It also records the *modelled* throughput + Eq. 2 HBM words/image for the
+paper's full-size nets (compile-only — nothing executes at 224x224 on
+CPU), so the perf trajectory of the planner is tracked per commit.
+
+  PYTHONPATH=src python benchmarks/pipeline_throughput.py [batch] \
+      [--json BENCH_pipeline.json]
+
+``--json`` writes the machine-readable artifact CI uploads per run.
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 import time
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.cnn import mini_resnet18
-from repro.core import build_pipeline_plan, fifo_sim
+from repro import compiler
+from repro.configs.cnn import CNN_CONFIGS, mini_resnet18
+from repro.core import fifo_sim
 from repro.models.cnn import cnn_input_shape, init_cnn_params
-from repro.runtime.pipeline import PipelineExecutor
+
+PAPER_NETS = ("resnet18", "resnet50", "vgg16")
 
 
 def bench(batch: int = 2) -> List[Dict]:
+    """Execute the mini net under pinned vs hybrid compiled pipelines."""
     cfg = mini_resnet18(hw=32, width=32)
     params = init_cnn_params(jax.random.PRNGKey(0), cfg)
     x = jax.random.randint(jax.random.PRNGKey(1),
                            cnn_input_shape(cfg, batch), -127, 128, jnp.int8)
 
-    hybrid = build_pipeline_plan(cfg, tb_budget=500, bram_m20ks=40)
+    hybrid = compiler.compile(cfg, compiler.TPU_INTERPRET)
     plans = {"pinned": hybrid.with_offload([]), "hybrid": hybrid}
 
     rows = []
-    for label, plan in plans.items():
-        ex = PipelineExecutor(plan)
-        ex.run(params, x)                          # warm-up / compile
+    for label, cp in plans.items():
+        ex = cp.executor()
+        jax.block_until_ready(ex.run(params, x)[0])    # warm-up / compile
         t0 = time.perf_counter()
-        _, report = ex.run(params, x)
-        dt = time.perf_counter() - t0
+        logits, report = ex.run(params, x)
+        jax.block_until_ready(logits)              # time execution, not
+        dt = time.perf_counter() - t0              # async dispatch
         row = {
             "name": f"pipeline/{label}",
-            "streamed_layers": len(plan.streamed),
+            "net": cfg.name,
+            "streamed_layers": len(cp.streamed_names),
+            "engines": sorted(set(cp.engine_table().values())),
             "wallclock_images_per_s": round(batch / dt, 2),
-            "model_images_per_s": round(plan.throughput()["images_per_s"], 1),
+            "model_images_per_s": round(cp.throughput()["images_per_s"], 1),
             "hbm_words_streamed": report.total_hbm_words,
+            "hbm_words_per_image": report.total_hbm_words // batch,
         }
-        if plan.streamed:
-            sim_cfg, scale = plan.sim_config(outputs_needed=8)
+        if cp.streamed_names:
+            sim_cfg, scale = cp.plan.sim_config(outputs_needed=8)
             sim = fifo_sim.simulate(sim_cfg, "credit")
             row.update({
                 "sim_stall_cycles": sim.stall_cycles,
@@ -66,10 +81,39 @@ def bench(batch: int = 2) -> List[Dict]:
     return rows
 
 
+def modelled_rows() -> List[Dict]:
+    """Compile-only §VI model numbers for the paper's full-size nets."""
+    rows = []
+    for name in PAPER_NETS:
+        cp = compiler.compile(CNN_CONFIGS[name], compiler.NX2100)
+        t = cp.throughput()
+        rows.append({
+            "name": f"model/{name}",
+            "net": name,
+            "streamed_layers": len(cp.streamed_names),
+            "model_images_per_s": round(t["images_per_s"], 1),
+            "bottleneck": t["bottleneck"],
+            "hbm_words_per_image": sum(cp.hbm_words_per_image().values()),
+        })
+    return rows
+
+
 def main() -> None:
-    batch = int(sys.argv[1]) if len(sys.argv) > 1 else 2
-    for row in bench(batch):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("batch", nargs="?", type=int, default=2)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the BENCH_pipeline.json artifact here")
+    args = ap.parse_args()
+
+    rows = bench(args.batch) + modelled_rows()
+    for row in rows:
         print("  ".join(f"{k}={v}" for k, v in row.items()))
+    if args.json:
+        artifact = {"benchmark": "pipeline_throughput",
+                    "batch": args.batch, "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -3,12 +3,16 @@ layer-pipelined dataflow accelerator with a hybrid weight memory.
 
   PYTHONPATH=src python examples/cnn_dataflow.py [resnet18|resnet50|vgg16]
 
-1. allocates per-layer parallelism (the HPIPE balancing pass),
-2. runs Eq. 1 + Algorithm 1 to decide which layers stream from HBM,
-3. assigns pseudo-channels clockwise and reports the throughput model
-   against the paper's measured numbers and Eq. 2 bound,
-4. EXECUTES an executable-scale variant of the network end-to-end through
-   the pipeline executor (runtime/pipeline.py): conv layers dispatch to
+1. ``compile(cfg, NX2100)`` runs the staged compiler against the paper's
+   device descriptor: parallelism allocation (HPIPE balancing), Eq. 1 +
+   Algorithm 1 placement, clockwise pseudo-channels, FIFO sizing, engine
+   binding, VMEM validation — and prints the engine table (which
+   registered LayerEngine runs each layer, in which weight tier) BEFORE
+   anything executes;
+2. reports the throughput model against the paper's measured numbers and
+   the Eq. 2 bound;
+3. EXECUTES an executable-scale variant of the network end-to-end through
+   the compiled pipeline (runtime/pipeline.py): conv layers dispatch to
    the conv2d_int8 Pallas engine with weights pinned or HBM-streamed per
    its own Algorithm 1 plan, fc heads ride stream_matmul — and the result
    is verified bit-identical to the functional reference.
@@ -18,51 +22,52 @@ import sys
 import jax
 import jax.numpy as jnp
 
+from repro import compiler
 from repro.configs import CNN_CONFIGS
 from repro.configs.cnn import mini_resnet18
-from repro.core import bounds, build_pipeline_plan, placement
+from repro.core import bounds, placement
 from repro.models.cnn import cnn_forward, cnn_input_shape, init_cnn_params
-from repro.runtime.pipeline import PipelineExecutor
 
 
 def main(name: str = "resnet18"):
     cfg = CNN_CONFIGS[name]
     frac = {"resnet18": .51, "resnet50": .33, "vgg16": .40}.get(name, .5)
-    plans = placement.allocate_parallelism(
-        cfg, int(bounds.NX2100_TENSOR_BLOCKS * frac))
-    plans = placement.hybrid_selection(plans, bounds.NX2100_M20KS)
-    placement.assign_pseudo_channels(plans)
+    target = compiler.NX2100.replace(
+        name=f"nx2100-{name}",
+        tb_budget=int(bounds.NX2100_TENSOR_BLOCKS * frac))
+    compiled = compiler.compile(cfg, target)
 
-    print(f"== {name}: H2PIPE compile ==")
-    offloaded = [p for p in plans if p.offload]
-    print(f"layers: {len(plans)}, offloaded to HBM: {len(offloaded)}")
-    for p in offloaded[:6]:
-        print(f"  {p.spec.name:10s} -> PC{p.pc:<2d} "
+    print(f"== {name}: H2PIPE compile for target {target.name!r} ==")
+    offloaded = compiled.plan.streamed
+    print(f"layers: {len(compiled.schedules)}, "
+          f"offloaded to HBM: {len(offloaded)}")
+    placements = {p.spec.name: p for p in compiled.plan.placements}
+    for s in offloaded[:6]:
+        p = placements[s.spec.name]
+        print(f"  {s.spec.name:10s} -> PC{s.pc:<2d} "
               f"score={placement.eq1_score(p):8.1f} "
               f"chains={p.chains}")
-    t = placement.pipeline_throughput(plans)
+    t = compiled.throughput()
     print(f"modelled throughput: {t['images_per_s']:.0f} im/s "
           f"(bottleneck {t['bottleneck']}, "
           f"{'HBM' if t['bottleneck_on_hbm'] else 'on-chip'})")
     print(f"Eq.2 all-HBM bound: {bounds.all_hbm_bound_ims(cfg):.0f} im/s")
 
-    # --- execute through the pipeline executor ---------------------------
+    # --- execute through the compiled pipeline ----------------------------
     # Executable scale: the mini ResNet-18 topology is big enough that
-    # Eq. 1 scores go positive and Algorithm 1 streams layers at a
-    # 40-M20K budget (a smaller device), yet runs in interpret mode on CPU.
+    # Eq. 1 scores go positive and Algorithm 1 streams layers on the
+    # TPU_INTERPRET target (a smaller device), yet runs in interpret mode
+    # on CPU.
     r = mini_resnet18(hw=32, width=32)
-    plan = build_pipeline_plan(r, tb_budget=500, bram_m20ks=40)
-    assert plan.streamed, "Algorithm 1 chose no HBM layers?"
-    print(f"\n== {r.name}: pipeline execution under the Algorithm 1 plan ==")
-    print(f"streamed from HBM: {', '.join(plan.streamed_names)}")
-    print(f"pinned on chip:    "
-          f"{', '.join(s.spec.name for s in plan.pinned)}")
+    cp = compiler.compile(r, compiler.TPU_INTERPRET)
+    assert cp.streamed_names, "Algorithm 1 chose no HBM layers?"
+    print(f"\n== {r.name}: compiled for {cp.target.name!r} ==")
+    print(cp.describe())
 
     params = init_cnn_params(jax.random.PRNGKey(0), r)
     x = jax.random.randint(jax.random.PRNGKey(1), cnn_input_shape(r, 4),
                            -127, 128, jnp.int8)
-    executor = PipelineExecutor(plan)
-    logits, report = executor.run(params, x)
+    logits, report = cp.run(params, x)
     ref = cnn_forward(params, r, x)
     print(f"images {x.shape} -> logits {logits.shape}, "
           f"bit-identical to reference: {bool(jnp.all(logits == ref))}")

@@ -1,0 +1,31 @@
+"""The H2PIPE compiler package — the repo's stable extension surface.
+
+Public API:
+
+  * :func:`compile` — ``compile(cfg, target) -> CompiledPipeline``: the
+    staged flow (parallelism -> Alg. 1 placement -> FIFO sizing -> engine
+    binding -> VMEM validation);
+  * :class:`Target` + presets :data:`NX2100` / :data:`TPU_INTERPRET` —
+    explicit device resource descriptors;
+  * :func:`register_engine` / :class:`LayerEngine` — the pluggable
+    per-layer kernel registry (conv2d_int8, dwconv_int8, stream_matmul,
+    jnp_ref built in);
+  * :class:`CompiledPipeline` — immutable result: ``engine_table()``,
+    ``vmem_report()``, ``describe()``, ``run()``.
+
+``repro.core.build_pipeline_plan`` remains as a deprecation shim over
+``plan_pipeline(cfg, NX2100.replace(**kwargs))`` — stages 1-3 only,
+preserving pre-compiler placements verbatim; ``compile()`` adds engine
+binding and VMEM validation on top.
+"""
+from repro.compiler.engines import (EngineContext, LayerEngine,  # noqa: F401
+                                    LayerExecStats, get_engine,
+                                    register_engine, registered_engines,
+                                    select_engine, unregister_engine)
+from repro.compiler.pipeline import (CompileError,  # noqa: F401
+                                     CompiledPipeline, EngineAssignment,
+                                     ExecutionReport, TargetBudgetError,
+                                     compile, finalize, plan_pipeline)
+from repro.compiler.target import (DEFAULT_VMEM_BYTES, NX2100,  # noqa: F401
+                                   PRESETS, TPU_INTERPRET, Target,
+                                   get_target)

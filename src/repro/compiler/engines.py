@@ -1,0 +1,355 @@
+"""LayerEngine protocol + registry — the compiler's extension surface.
+
+H2PIPE emits *layer-specific* hardware: every layer gets its own engine,
+chosen by what the layer is (dense conv, depthwise conv, fc head) and
+where its weights live (pinned M20K vs HBM-streamed).  This module is the
+software analogue: a :class:`LayerEngine` wraps one Pallas kernel family
+and declares
+
+  * ``supports(spec)``            which :class:`ConvLayerSpec` shapes it
+                                  can run (checked at *compile* time — no
+                                  more discovering fallbacks at dispatch);
+  * ``vmem_bytes(spec, sched)``   the working set one dispatch claims, so
+                                  ``compile()`` can validate every layer
+                                  against the Target's VMEM budget and
+                                  re-place (pin -> stream) the ones that
+                                  do not fit;
+  * ``run(ctx, sched, params, x, relu)``
+                                  the actual dispatch.  ``ctx`` is a
+                                  per-execution :class:`EngineContext`
+                                  (interpret flag, activation scale, stats
+                                  sink) — engines hold NO mutable state,
+                                  so one compiled pipeline can serve
+                                  concurrent requests.
+
+Engines register under a short name with :func:`register_engine`; the
+compiler picks, per layer, the highest-priority registered engine whose
+``supports`` accepts the spec.  Registering your own engine (a sparse
+conv, a Winograd path, an FPGA RTL emitter...) requires no edits here:
+
+    @register_engine("myconv", priority=20)
+    class MyConvEngine:
+        def supports(self, spec): ...
+        def vmem_bytes(self, spec, sched): ...
+        def run(self, ctx, sched, params, x, relu): ...
+
+Built-in engines: ``conv2d_int8`` (dense/pointwise conv + big fc-as-conv
+heads), ``dwconv_int8`` (grouped depthwise — the MobileNet path),
+``stream_matmul`` (1x1 fc heads), ``jnp_ref`` (XLA reference, priority 0
+safety net).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cnn import ConvLayerSpec
+from repro.core.schedule import HBM, PINNED, LayerSchedule
+from repro.kernels.conv2d_int8.ops import conv2d_int8, same_padded_width
+from repro.kernels.quant import requant_epilogue
+from repro.kernels.stream_matmul import ops as sm_ops
+
+Params = Dict[str, Any]
+
+# the ONE dequant+bias+relu+requant epilogue (kernels/quant.py), jitted so
+# its float ops compile exactly like the reference path's
+_requant = functools.partial(jax.jit, static_argnames=("act_scale", "relu"))(
+    requant_epilogue)
+
+
+def _block(n: int, cap: int) -> int:
+    """Largest divisor of n not exceeding cap (Pallas block sizing)."""
+    for b in range(min(n, cap), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _padded_width(spec: ConvLayerSpec) -> int:
+    """SAME-padded input width (what the line buffer actually holds) —
+    from the kernel module's own padding formula, so validation and
+    allocation cannot drift apart."""
+    return same_padded_width(spec.in_w, spec.k_w, spec.stride)
+
+
+# ---------------------------------------------------------------------------
+# execution context + per-dispatch stats
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LayerExecStats:
+    """What one layer dispatch did (which engine, which tier, Eq. 2 words)."""
+
+    name: str
+    mode: str                     # "pinned" | "hbm"
+    kernel: str                   # engine name that actually ran
+    hbm_words: int = 0            # Eq. 2 words streamed for this dispatch
+
+
+@dataclass
+class EngineContext:
+    """Per-execution state threaded through every engine call.
+
+    Created fresh by each ``PipelineExecutor.run`` (never shared between
+    runs), so concurrent executions of one compiled pipeline cannot
+    corrupt each other's reports — the re-entrancy contract batched
+    serving builds on.
+    """
+
+    interpret: bool
+    act_scale: float
+    stats: Optional[List[LayerExecStats]] = field(default=None)
+
+    def record(self, sched: LayerSchedule, *, kernel: str, batch: int,
+               rows: int = 0, mode: Optional[str] = None) -> None:
+        if self.stats is None:
+            return
+        mode = sched.mode if mode is None else mode
+        words = 0
+        if mode == HBM and batch:
+            # Eq. 2 accounting: kernels re-read once per output row, per
+            # image.  (On TPU the matmul amortizes the batch dim; the
+            # paper's accelerator is batch-1, so we report paper units.)
+            words = sched.weight_words_per_row * rows * batch
+        self.stats.append(LayerExecStats(
+            name=sched.spec.name, mode=mode, kernel=kernel, hbm_words=words))
+
+
+# ---------------------------------------------------------------------------
+# the protocol + registry
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class LayerEngine(Protocol):
+    """One layer-engine family the compiler can instantiate.
+
+    Engines may additionally declare ``can_stream = False`` (default
+    True) when they cannot source weights from the HBM tier; stage 5
+    keeps such bindings pinned so plan analytics never charge Eq. 2
+    traffic an engine will not execute."""
+
+    name: str
+
+    def supports(self, spec: ConvLayerSpec) -> bool:
+        """Can this engine execute the layer (decided at compile time)?"""
+        ...
+
+    def vmem_bytes(self, spec: ConvLayerSpec, sched: LayerSchedule) -> int:
+        """Working-set bytes one dispatch claims (batch-1 convention)."""
+        ...
+
+    def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
+            x: jnp.ndarray, relu: bool
+            ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """Execute the layer; returns (int8 activations, float pre-quant)."""
+        ...
+
+
+# name -> stack of (priority, insertion_seq, engine); the TOP of each
+# stack is live.  Re-registering a name pushes (shadowing the previous
+# engine), unregistering pops (restoring it) — so overrides of built-ins
+# round-trip without touching this module.  Selection order over the live
+# engines is priority DESC then insertion order.
+_REGISTRY: Dict[str, List[Tuple[int, int, LayerEngine]]] = {}
+_SEQ = 0
+
+
+def register_engine(name: str, *, priority: int = 10):
+    """Class decorator: instantiate and register a LayerEngine under
+    ``name``.  Registering an existing name shadows the previous engine
+    (how tests/users override a built-in); :func:`unregister_engine`
+    pops the override and restores what it shadowed."""
+    def deco(cls):
+        global _SEQ
+        engine = cls() if isinstance(cls, type) else cls
+        engine.name = name
+        _SEQ += 1
+        _REGISTRY.setdefault(name, []).append((priority, _SEQ, engine))
+        return cls
+    return deco
+
+
+def unregister_engine(name: str) -> Optional[LayerEngine]:
+    """Pop the live engine for ``name`` (restoring any engine it
+    shadowed); returns it, or None if the name is unknown."""
+    stack = _REGISTRY.get(name)
+    if not stack:
+        return None
+    _, _, engine = stack.pop()
+    if not stack:
+        del _REGISTRY[name]
+    return engine
+
+
+def get_engine(name: str) -> LayerEngine:
+    try:
+        return _REGISTRY[name][-1][2]
+    except KeyError:
+        raise KeyError(f"no engine registered under {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def registered_engines() -> Dict[str, LayerEngine]:
+    """Live registered engines in selection order (priority DESC, age)."""
+    tops = {name: stack[-1] for name, stack in _REGISTRY.items()}
+    items = sorted(tops.items(), key=lambda kv: (-kv[1][0], kv[1][1]))
+    return {name: eng for name, (_, _, eng) in items}
+
+
+def select_engine(spec: ConvLayerSpec) -> LayerEngine:
+    """The compile-time choice: highest-priority engine claiming the spec."""
+    for eng in registered_engines().values():
+        if eng.supports(spec):
+            return eng
+    raise LookupError(f"no registered engine supports layer {spec.name!r} "
+                      f"(kind={spec.kind!r})")
+
+
+def _is_1x1_fc(spec: ConvLayerSpec) -> bool:
+    """fc heads that run as a [B, c_in] x [c_in, c_out] matmul: 1x1 kernel
+    on a 1x1 (pooled) map.  Big fc-as-conv heads (VGG's 7x7 fc0) keep the
+    conv engine."""
+    return (spec.kind == "fc" and spec.k_h == 1 and spec.k_w == 1
+            and spec.in_h == 1 and spec.in_w == 1)
+
+
+def _fc_conv_is_valid_equivalent(spec: ConvLayerSpec) -> bool:
+    """The reference applies fc layers with VALID padding while the conv
+    engine SAME-pads, so the conv engine may only claim fc-as-conv heads
+    whose SAME padding computes to zero in both dims (then SAME == VALID
+    bit-for-bit — e.g. VGG's fc0: 7x7 kernel on a 7x7 map, stride 7).
+    Anything else binds to the explicit jnp_ref engine instead of
+    executing with the wrong padding."""
+    return (same_padded_width(spec.in_h, spec.k_h, spec.stride) == spec.in_h
+            and same_padded_width(spec.in_w, spec.k_w, spec.stride)
+            == spec.in_w)
+
+
+# ---------------------------------------------------------------------------
+# built-in engines
+# ---------------------------------------------------------------------------
+
+
+@register_engine("conv2d_int8", priority=10)
+class Conv2DInt8Engine:
+    """The line-buffer conv Pallas kernel as an engine; weights pinned in
+    VMEM or streamed through the n_buffers-deep HBM ring per the
+    schedule.  ``depthwise=False`` covers dense/pointwise convs (and
+    fc-as-conv heads); the ``depthwise=True`` instance (registered as
+    ``dwconv_int8``) is the grouped MobileNet path, where each channel
+    MACs against its own [k_h, k_w] filter — elementwise VPU taps instead
+    of MXU dots, [1, C] ring slots instead of [C, C_out]."""
+
+    def __init__(self, depthwise: bool = False):
+        self.depthwise = depthwise
+
+    def supports(self, spec: ConvLayerSpec) -> bool:
+        if self.depthwise:
+            return spec.kind == "dwconv"
+        return spec.kind in ("conv", "pwconv") or (
+            spec.kind == "fc" and not _is_1x1_fc(spec)
+            and _fc_conv_is_valid_equivalent(spec))
+
+    def vmem_bytes(self, spec: ConvLayerSpec, sched: LayerSchedule) -> int:
+        # channel factors of one weight tap: [1, C] depthwise, [C, C_out]
+        # dense.  Widths use the kernel's SAME-pad ceil, not spec's floor.
+        tap_in = 1 if self.depthwise else spec.c_in
+        c_out = spec.c_in if self.depthwise else spec.c_out
+        out_w = -(-spec.in_w // spec.stride)
+        line_buf = spec.k_h * _padded_width(spec) * spec.c_in      # int8
+        if sched.streamed:
+            w = min(sched.n_buffers, spec.k_h * spec.k_w) \
+                * tap_in * c_out                                   # ring
+        else:
+            w = spec.k_h * spec.k_w * tap_in * c_out               # pinned
+        out_row = out_w * c_out * 4                                # int32
+        return line_buf + w + 2 * out_row                          # + acc
+
+    def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
+            x, relu: bool):
+        spec = sched.spec
+        y = conv2d_int8(x, params["w"], stride=spec.stride,
+                        stream=sched.streamed, n_buffers=sched.n_buffers,
+                        depthwise=self.depthwise, interpret=ctx.interpret)
+        y_q, y_f = _requant(y, params["w_scale"], params["bias"],
+                            act_scale=ctx.act_scale, relu=relu)
+        ctx.record(sched, kernel=self.name, batch=int(x.shape[0]),
+                   rows=int(y.shape[1]))
+        return y_q, y_f
+
+
+# the grouped depthwise path is the same engine with the flag flipped
+register_engine("dwconv_int8", priority=10)(Conv2DInt8Engine(depthwise=True))
+
+
+@register_engine("stream_matmul", priority=10)
+class StreamMatmulFCEngine:
+    """1x1 fc heads as a streamed matmul: ``pinned`` mode keeps W resident
+    in VMEM for the call, ``fifo`` prefetches K-blocks through an explicit
+    credit ring — the same two weight tiers, matmul-shaped."""
+
+    BM, BK, BN = 128, 512, 128
+
+    def supports(self, spec: ConvLayerSpec) -> bool:
+        return _is_1x1_fc(spec)
+
+    def vmem_bytes(self, spec: ConvLayerSpec, sched: LayerSchedule) -> int:
+        mode = "fifo" if sched.streamed else "pinned"
+        return sm_ops.vmem_bytes(
+            mode, 1, spec.c_in, spec.c_out, 1,
+            bm=1, bk=_block(spec.c_in, self.BK),
+            bn=_block(spec.c_out, self.BN),
+            n_buffers=max(2, sched.n_buffers))
+
+    def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
+            x, relu: bool):
+        spec = sched.spec
+        B = int(x.shape[0])
+        c_in, c_out = spec.c_in, spec.c_out
+        x2 = x.reshape(B, c_in)
+        w2 = params["w"].reshape(c_in, c_out)
+        mode = "fifo" if sched.streamed else "pinned"
+        y = sm_ops.stream_matmul(x2, w2, mode=mode,
+                                 bm=_block(B, self.BM),
+                                 bk=_block(c_in, self.BK),
+                                 bn=_block(c_out, self.BN),
+                                 n_buffers=max(2, sched.n_buffers),
+                                 interpret=ctx.interpret)
+        y_q, y_f = _requant(y.reshape(B, 1, 1, c_out), params["w_scale"],
+                            params["bias"], act_scale=ctx.act_scale,
+                            relu=relu)
+        ctx.record(sched, kernel=self.name, batch=B, rows=1)
+        return y_q, y_f
+
+
+@register_engine("jnp_ref", priority=0)
+class JnpReferenceEngine:
+    """The XLA reference path as an explicit, lowest-priority engine: it
+    supports every layer and claims no VMEM (XLA manages its own), so a
+    layer only lands here when no Pallas engine claims it — and the
+    engine table SAYS so at compile time instead of a silent dispatch
+    fallback.  Streams nothing (``can_stream = False``: stage 5 pins any
+    placement that lands here), and accounting records the pinned tier
+    that actually ran."""
+
+    can_stream = False
+
+    def supports(self, spec: ConvLayerSpec) -> bool:
+        return True
+
+    def vmem_bytes(self, spec: ConvLayerSpec, sched: LayerSchedule) -> int:
+        return 0
+
+    def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
+            x, relu: bool):
+        from repro.models.cnn import conv_layer_forward
+        y_q, y_f = conv_layer_forward(params, sched.spec, x,
+                                      act_scale=ctx.act_scale, relu=relu)
+        ctx.record(sched, kernel=self.name, batch=0, mode=PINNED)
+        return y_q, y_f

@@ -1,0 +1,322 @@
+"""``compile(cfg, target) -> CompiledPipeline`` — the staged H2PIPE compiler.
+
+The paper's flow is a compiler pipeline, and this module makes each stage
+an explicit pass over explicit values:
+
+  1. **parallelism**   HPIPE balancing allocates (p_i, p_o) per layer under
+                       ``target.tb_budget`` AI-TBs (§II-B);
+  2. **placement**     hybrid selection (Eq. 1 order under the
+                       pseudo-channel chain budget) picks the HBM-streamed
+                       set until the on-chip remainder fits
+                       ``target.bram_m20ks`` (Algorithm 1, §V-B), then
+                       clockwise pseudo-channel assignment;
+  3. **FIFO sizing**   last-stage + burst-matching depths from the measured
+                       HBM latency/efficiency curves (§III/§IV-A), fused
+                       into per-layer :class:`LayerSchedule`\\ s;
+  4. **engine select** every layer is bound to a registered
+                       :class:`~repro.compiler.engines.LayerEngine` —
+                       the binding is *visible* (``engine_table()``)
+                       before anything executes;
+  5. **validation**    each binding's ``vmem_bytes`` is checked against
+                       ``target.vmem_bytes``.  A pinned layer that does
+                       not fit is re-placed to the HBM tier when its
+                       streamed working set does; layers that fit in
+                       neither tier abort compilation with a
+                       :class:`TargetBudgetError` carrying the full
+                       per-layer VMEM report.
+
+The result is immutable and reusable: ``CompiledPipeline.executor()``
+(or ``.run``) executes it, ``engine_table()``/``vmem_report()`` expose
+the decisions, ``with_offload()`` recompiles with a forced offload set.
+
+Migration: ``repro.core.build_pipeline_plan(cfg, **kw)`` is now a
+deprecation shim over ``plan_pipeline(cfg, NX2100.replace(**kw))`` —
+stages 1-3 only, preserving pre-compiler placements verbatim; migrating
+to ``compile()`` adds engine binding and VMEM validation on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.compiler.engines import (EngineContext,  # noqa: F401 (re-export)
+                                    LayerExecStats, get_engine,
+                                    select_engine)
+from repro.compiler.target import NX2100, Target
+from repro.configs.cnn import CNNConfig
+from repro.core import fifo_sim, hbm_model, placement
+from repro.core.schedule import (HBM, PINNED, LayerSchedule, PipelinePlan)
+
+
+class CompileError(ValueError):
+    """A stage of ``compile()`` rejected the (config, target) pair."""
+
+
+class TargetBudgetError(CompileError):
+    """One or more layers exceed the target's VMEM budget in the weight
+    tier they were compiled to.  Carries the per-layer report so callers
+    see the whole picture, not just the first offender."""
+
+    def __init__(self, target: Target, report: Dict[str, int],
+                 offenders: Sequence[str], reason: str):
+        self.target = target
+        self.vmem_report = dict(report)
+        self.offenders = tuple(offenders)
+        lines = [f"{name}: {report[name]} B" for name in offenders]
+        super().__init__(
+            f"target {target.name!r}: {len(offenders)} layer(s) exceed the "
+            f"per-engine VMEM budget ({target.vmem_bytes} B) {reason}: "
+            + "; ".join(lines))
+
+
+@dataclass(frozen=True)
+class EngineAssignment:
+    """The compile-time binding of one layer to one registered engine."""
+
+    layer: str
+    engine: str                   # registry name (resolved at dispatch)
+    mode: str                     # PINNED | HBM
+    vmem_bytes: int               # working set the binding claims
+
+
+@dataclass(frozen=True)
+class CompiledPipeline:
+    """An executable, validated pipeline: plan + engine bindings + target."""
+
+    plan: PipelinePlan
+    target: Optional[Target]
+    assignments: Tuple[EngineAssignment, ...]
+    replaced: Tuple[str, ...] = ()    # layers stage 5 moved pin -> stream
+
+    # -- introspection ------------------------------------------------------
+
+    def engine_table(self) -> Dict[str, str]:
+        """layer name -> registered engine name, in pipeline order."""
+        return {a.layer: a.engine for a in self.assignments}
+
+    def vmem_report(self) -> Dict[str, int]:
+        """layer name -> working-set bytes of its engine binding."""
+        return {a.layer: a.vmem_bytes for a in self.assignments}
+
+    def assignment_for(self, name: str) -> Optional[EngineAssignment]:
+        return self._assignment_index.get(name)
+
+    @functools.cached_property
+    def _assignment_index(self) -> Dict[str, EngineAssignment]:
+        """name -> assignment map (cached_property writes straight into
+        ``__dict__``, which frozen dataclasses permit)."""
+        return {a.layer: a for a in self.assignments}
+
+    def describe(self) -> str:
+        """Human-readable engine table (what runs where, before it runs)."""
+        hdr = f"{'layer':12s} {'kind':7s} {'tier':7s} {'engine':14s} " \
+              f"{'vmem':>10s}  pc"
+        rows = [hdr, "-" * len(hdr)]
+        for s, a in zip(self.plan.schedules, self.assignments):
+            pc = f"PC{s.pc}" if s.pc is not None else "-"
+            rows.append(f"{a.layer:12s} {s.spec.kind:7s} {a.mode:7s} "
+                        f"{a.engine:14s} {a.vmem_bytes:>10d}  {pc}")
+        return "\n".join(rows)
+
+    # -- plan conveniences --------------------------------------------------
+
+    @property
+    def cfg(self) -> CNNConfig:
+        return self.plan.cfg
+
+    @property
+    def schedules(self) -> Tuple[LayerSchedule, ...]:
+        return self.plan.schedules
+
+    @property
+    def streamed_names(self) -> Tuple[str, ...]:
+        return self.plan.streamed_names
+
+    def hbm_words_per_image(self) -> Dict[str, int]:
+        return self.plan.hbm_words_per_image()
+
+    def throughput(self) -> Dict[str, float]:
+        return self.plan.throughput()
+
+    def predict_stalls(self, outputs_needed: int = 32,
+                       word_scale: Optional[int] = None
+                       ) -> fifo_sim.SimOutcome:
+        return self.plan.predict_stalls(outputs_needed, word_scale)
+
+    def with_offload(self, names: Sequence[str]) -> "CompiledPipeline":
+        """Recompile (engine selection + validation) with the offload set
+        forced to exactly ``names``.  The forced set is honored verbatim:
+        stage 5 does NOT re-place layers here — a forced-pinned layer
+        that exceeds the target's VMEM budget raises
+        :class:`TargetBudgetError` instead of silently streaming."""
+        return finalize(self.plan.with_offload(names), self.target,
+                        replace=False)
+
+    # -- execution ----------------------------------------------------------
+
+    def executor(self, *, interpret: Optional[bool] = None,
+                 act_scale: float = 0.05):
+        from repro.runtime.pipeline import PipelineExecutor
+        return PipelineExecutor(self, interpret=interpret,
+                                act_scale=act_scale)
+
+    def run(self, params, images, *, interpret: Optional[bool] = None):
+        """One-shot: (logits, ExecutionReport) for ``images``."""
+        return self.executor(interpret=interpret).run(params, images)
+
+
+@dataclass
+class ExecutionReport:
+    """What one execution did, cross-checked three ways (executed Eq. 2
+    words at dispatch, the plan's analytic words, the §V-A fifo_sim)."""
+
+    plan: PipelinePlan
+    images: int = 0
+    layers: list = dataclasses.field(default_factory=list)  # LayerExecStats
+
+    @property
+    def hbm_weight_words(self) -> Dict[str, int]:
+        """Total streamed weight words per layer for the whole batch."""
+        out: Dict[str, int] = {}
+        for st in self.layers:
+            if st.mode == HBM:
+                out[st.name] = out.get(st.name, 0) + st.hbm_words
+        return out
+
+    @property
+    def total_hbm_words(self) -> int:
+        return sum(self.hbm_weight_words.values())
+
+    @property
+    def streamed_layer_count(self) -> int:
+        return len({st.name for st in self.layers if st.mode == HBM})
+
+    def engines_used(self) -> Dict[str, str]:
+        """layer -> engine that actually ran (must equal the compile-time
+        engine_table for layers the pipeline dispatched)."""
+        return {st.name: st.kernel for st in self.layers}
+
+    def fifo_prediction(self, outputs_needed: int = 32,
+                        word_scale: Optional[int] = None
+                        ) -> fifo_sim.SimOutcome:
+        """§V-A credit-mode stall/delivery prediction for the streamed set."""
+        return self.plan.predict_stalls(outputs_needed, word_scale)
+
+    def modelled_throughput(self) -> Dict[str, float]:
+        return self.plan.throughput()
+
+
+# ---------------------------------------------------------------------------
+# the passes
+# ---------------------------------------------------------------------------
+
+
+def plan_pipeline(cfg: CNNConfig, target: Target) -> PipelinePlan:
+    """Stages 1-3: parallelism, placement, FIFO sizing — the executable
+    :class:`PipelinePlan` (no engine bindings yet)."""
+    plans = placement.allocate_parallelism(cfg, target.tb_budget)
+    plans = placement.hybrid_selection(plans, target.bram_m20ks,
+                                       n_pc=target.n_pc, burst=target.burst)
+    placement.assign_pseudo_channels(plans, n_pc=target.n_pc)
+
+    laststage = hbm_model.min_laststage_fifo_depth(target.burst)
+    bm_words = hbm_model.burst_matching_fifo_words(target.burst)
+    schedules = tuple(
+        LayerSchedule(
+            spec=p.spec,
+            mode=HBM if p.offload else PINNED,
+            p_i=p.p_i, p_o=p.p_o, pc=p.pc,
+            burst=target.burst,
+            laststage_fifo_depth=laststage,
+            bm_fifo_words=bm_words,
+            n_buffers=target.n_buffers,
+        ) for p in plans)
+    return PipelinePlan(cfg=cfg, schedules=schedules,
+                        placements=tuple(plans), burst=target.burst,
+                        n_pc=target.n_pc)
+
+
+def finalize(plan: PipelinePlan, target: Optional[Target], *,
+             replace: bool = True) -> CompiledPipeline:
+    """Stages 4-5 over an existing plan: bind every layer to a registered
+    engine, then enforce the target's VMEM budget — re-placing pinned
+    layers whose working set only fits when streamed, and raising
+    :class:`TargetBudgetError` for layers that fit in neither tier.
+
+    Re-placement respects Algorithm 1's hard feasibility constraint: a
+    move consumes the layer's ``p_i * p_o`` tensor-chain feeds from the
+    target's pseudo-channel pool, and layers the pool cannot feed stay
+    pinned (and fail validation) rather than silently oversubscribing
+    the HBM bandwidth the throughput model assumes.
+
+    ``replace=False`` keeps the plan's tier decisions verbatim (used by
+    ``with_offload``: a caller-forced offload set must not be silently
+    expanded — validation fails instead).  ``target=None`` binds engines
+    without budget enforcement (the deprecation-compat path for raw
+    ``PipelinePlan`` values).
+    """
+    # engine choice depends only on the spec, so bind once per layer and
+    # reuse across the re-placement and assignment passes
+    engines = {s.spec.name: select_engine(s.spec) for s in plan.schedules}
+
+    moved = []
+    if target is not None and replace:
+        free_bw = target.chain_budget - sum(
+            s.p_i * s.p_o for s in plan.streamed)
+        for s in plan.schedules:
+            eng = engines[s.spec.name]
+            if s.streamed or eng.vmem_bytes(s.spec, s) <= target.vmem_bytes:
+                continue
+            streamed = dataclasses.replace(s, mode=HBM)
+            chains = s.p_i * s.p_o
+            if eng.vmem_bytes(s.spec, streamed) <= target.vmem_bytes \
+                    and chains <= free_bw:
+                moved.append(s.spec.name)
+                free_bw -= chains
+        if moved:
+            plan = plan.with_offload(
+                set(plan.streamed_names) | set(moved))
+
+    # engines that cannot source weights from HBM (jnp_ref) must not hold
+    # the HBM tier, or plan analytics/fifo_sim would charge Eq. 2 traffic
+    # that never executes: demote compile-chosen placements to pinned,
+    # reject caller-forced ones loudly.
+    unstreamable = [s.spec.name for s in plan.streamed
+                    if not getattr(engines[s.spec.name], "can_stream", True)]
+    if unstreamable:
+        if not replace:
+            raise CompileError(
+                f"layer(s) {unstreamable} are bound to engines that cannot "
+                f"stream weights from HBM; remove them from the forced "
+                f"offload set")
+        plan = plan.with_offload(
+            set(plan.streamed_names) - set(unstreamable))
+
+    assignments = []
+    offenders = []
+    for s in plan.schedules:
+        eng = engines[s.spec.name]
+        vb = eng.vmem_bytes(s.spec, s)
+        assignments.append(EngineAssignment(
+            layer=s.spec.name, engine=eng.name, mode=s.mode, vmem_bytes=vb))
+        if target is not None and vb > target.vmem_bytes:
+            offenders.append(s.spec.name)
+    if offenders:
+        reason = ("in every feasible weight tier (pinned over budget; HBM "
+                  "tier over budget or out of pseudo-channel bandwidth)"
+                  if replace else
+                  "in their forced weight tier (re-placement disabled by "
+                  "with_offload)")
+        raise TargetBudgetError(
+            target, {a.layer: a.vmem_bytes for a in assignments}, offenders,
+            reason)
+    return CompiledPipeline(plan=plan, target=target,
+                            assignments=tuple(assignments),
+                            replaced=tuple(moved))
+
+
+def compile(cfg: CNNConfig, target: Target = NX2100) -> CompiledPipeline:
+    """Compile a CNN for a target: all five passes, validated, executable."""
+    return finalize(plan_pipeline(cfg, target), target)

@@ -1,0 +1,118 @@
+"""Target descriptors — the resource envelope ``compile()`` plans against.
+
+H2PIPE is a compiler: the same CNN maps to different hardware depending on
+how many tensor blocks, how much on-chip RAM, and how many HBM
+pseudo-channels the device offers.  A :class:`Target` makes that envelope
+an explicit, immutable value instead of the keyword-argument defaults the
+old ``build_pipeline_plan`` scattered over call sites:
+
+  * ``tb_budget``      AI tensor blocks the parallelism allocator may spend
+                       (the HPIPE balancing pass, §II-B);
+  * ``bram_m20ks``     on-chip weight/activation RAM in M20K blocks — the
+                       budget Algorithm 1's hybrid selection fills (§V-B);
+  * ``vmem_bytes``     per-layer-engine working-set ceiling in bytes (the
+                       TPU VMEM analogue of one engine's M20K slice);
+                       ``compile()`` re-places or rejects layers whose
+                       chosen engine exceeds it;
+  * ``n_pc``/``burst`` HBM pseudo-channels usable and words per read
+                       request (§III);
+  * ``n_buffers``      double-buffer ring depth of streamed weight paths;
+  * ``backend``        where the compiled pipeline executes: "interpret"
+                       (Pallas interpreter — CPU CI), "compiled" (Mosaic on
+                       a real TPU), or "auto" (interpret unless a TPU is
+                       attached, via ``pallas_compat.resolve_interpret``).
+
+Presets
+-------
+``NX2100``        the paper's Stratix 10 NX2100 at half AI-TB utilization —
+                  the defaults ``build_pipeline_plan`` used to hard-code.
+``TPU_INTERPRET`` an executable-scale device model for interpret-mode runs:
+                  small BRAM so Algorithm 1 genuinely streams layers of the
+                  mini networks, forced-interpret backend (the old
+                  ``tb_budget=500, bram_m20ks=40`` test/example defaults).
+
+Derive variants with :func:`dataclasses.replace` (Targets are frozen), e.g.
+``dataclasses.replace(NX2100, burst=16)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core import bounds, hbm_model
+
+#: Per-core VMEM on the TPU generations we execute on (and, coincidentally,
+#: about the NX2100's total M20K capacity: 6847 x 20480 bits ~ 17.5 MB).
+DEFAULT_VMEM_BYTES = 16 * 1024 * 1024
+
+
+@dataclass(frozen=True)
+class Target:
+    """Immutable resource descriptor one pipeline is compiled against."""
+
+    name: str
+    tb_budget: int                     # AI tensor blocks for parallelism
+    bram_m20ks: int                    # on-chip RAM budget (M20K blocks)
+    vmem_bytes: int = DEFAULT_VMEM_BYTES   # per-engine working-set ceiling
+    n_pc: int = hbm_model.USABLE_PCS   # usable HBM pseudo-channels
+    burst: int = 8                     # HBM words per read request
+    n_buffers: int = 2                 # streamed-weight ring depth
+    backend: str = "auto"              # "auto" | "interpret" | "compiled"
+
+    def __post_init__(self):
+        if self.backend not in ("auto", "interpret", "compiled"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        for f in ("tb_budget", "bram_m20ks", "vmem_bytes", "n_pc", "burst",
+                  "n_buffers"):
+            if getattr(self, f) <= 0:
+                raise ValueError(f"{f} must be positive")
+
+    @property
+    def interpret(self) -> Optional[bool]:
+        """The ``interpret`` value kernel calls should resolve against:
+        ``None`` (auto-detect) for the "auto" backend, else forced."""
+        return {"auto": None, "interpret": True, "compiled": False}[
+            self.backend]
+
+    @property
+    def chain_budget(self) -> int:
+        """HBM bandwidth pool in 80-bit tensor-chain feeds (Alg. 1 units)."""
+        from repro.core.placement import CHAINS_PER_PC
+        return self.n_pc * CHAINS_PER_PC
+
+    def replace(self, **changes) -> "Target":
+        """``dataclasses.replace`` convenience; renames the variant unless
+        the caller overrides ``name`` too."""
+        if "name" not in changes:
+            changes["name"] = self.name + "*"
+        return dataclasses.replace(self, **changes)
+
+
+#: The paper's device: Stratix 10 NX2100 at half AI-TB utilization, full
+#: M20K budget, 31 usable pseudo-channels, burst 8 (§VI defaults).
+NX2100 = Target(
+    name="nx2100",
+    tb_budget=bounds.NX2100_TENSOR_BLOCKS // 2,
+    bram_m20ks=bounds.NX2100_M20KS,
+)
+
+#: Executable scale for CPU CI / dev machines: BRAM small enough that
+#: Algorithm 1 streams several layers of ``mini_resnet18``, Pallas engines
+#: forced through the interpreter.
+TPU_INTERPRET = Target(
+    name="tpu-interpret",
+    tb_budget=500,
+    bram_m20ks=40,
+    backend="interpret",
+)
+
+PRESETS = {t.name: t for t in (NX2100, TPU_INTERPRET)}
+
+
+def get_target(name: str) -> Target:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown target {name!r}; presets: {sorted(PRESETS)}") from None

@@ -1,5 +1,6 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# The paper's planning passes (placement, FIFO sizing, fifo_sim) and the
+# schedule data model live here; the staged compile() API that fuses them
+# and binds layer engines lives in ``repro.compiler``.
+# ``build_pipeline_plan`` is a deprecation shim over that compiler.
 from repro.core.schedule import (HBM, PINNED, LayerSchedule,  # noqa: F401
                                  PipelinePlan, build_pipeline_plan)

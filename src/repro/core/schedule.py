@@ -4,11 +4,15 @@ The planner pieces each answer one question: ``placement`` decides *which*
 layers stream weights from HBM (Eq. 1 / Algorithm 1) and how much
 parallelism each engine gets; ``hbm_model`` sizes the FIFOs that make the
 streams safe (§III-B/§IV-A); ``fifo_sim`` proves the flow control live
-(§V-A).  ``build_pipeline_plan`` fuses all three into one *executable*
-schedule: per layer, the weight tier (pinned vs HBM-streamed), the
-pseudo-channel, the burst length, and the FIFO/double-buffer depths the
-runtime executor (``repro.runtime.pipeline``) instantiates as Pallas
-kernel configurations.
+(§V-A).  The staged compiler (``repro.compiler.compile``) fuses all three
+into one *executable* schedule: per layer, the weight tier (pinned vs
+HBM-streamed), the pseudo-channel, the burst length, and the
+FIFO/double-buffer depths the runtime executor
+(``repro.runtime.pipeline``) instantiates as Pallas kernel
+configurations.  This module owns the schedule *data model*
+(:class:`LayerSchedule` / :class:`PipelinePlan`) plus the deprecated
+``build_pipeline_plan`` shim; the passes themselves live in
+``repro.compiler.pipeline``.
 
 Units: weight traffic is counted in 80-bit tensor-chain words (the
 granularity a pseudo-channel feeds, §III-B); a streamed layer re-reads its
@@ -18,11 +22,13 @@ kernel once per output row (Eq. 2), so
 from __future__ import annotations
 
 import dataclasses
+import functools
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.cnn import CNNConfig, ConvLayerSpec
-from repro.core import bounds, fifo_sim, hbm_model, placement
+from repro.core import fifo_sim, hbm_model, placement
 from repro.core.placement import CHAIN_BITS, LayerPlan
 
 PINNED = "pinned"                 # weights resident on chip (M20K / VMEM)
@@ -68,11 +74,14 @@ class PipelinePlan:
     burst: int
     n_pc: int
 
+    @functools.cached_property
+    def _schedule_index(self) -> Dict[str, LayerSchedule]:
+        """name -> schedule map, built once per plan (plans are frozen;
+        ``dataclasses.replace`` derivatives get a fresh cache)."""
+        return {s.spec.name: s for s in self.schedules}
+
     def schedule_for(self, name: str) -> LayerSchedule:
-        for s in self.schedules:
-            if s.spec.name == name:
-                return s
-        raise KeyError(name)
+        return self._schedule_index[name]
 
     @property
     def streamed(self) -> Tuple[LayerSchedule, ...]:
@@ -169,36 +178,27 @@ def build_pipeline_plan(cfg: CNNConfig, *,
                         burst: int = 8,
                         n_pc: int = hbm_model.USABLE_PCS,
                         n_buffers: int = 2) -> PipelinePlan:
-    """Compile a CNN into an executable pipeline schedule.
+    """DEPRECATED shim over the staged compiler (``repro.compiler``).
 
-    1. HPIPE balancing allocates (p_i, p_o) under ``tb_budget`` AI-TBs;
-    2. hybrid selection (Eq. 1 order under the chain-bandwidth budget)
-       picks the HBM-streamed set until on-chip memory fits ``bram_m20ks``;
-    3. clockwise pseudo-channel assignment (§V-B);
-    4. FIFO depths from the measured HBM latency/efficiency (§III/IV).
-
-    Defaults model the paper's Stratix 10 NX2100 at half AI-TB utilization.
+    Use ``repro.compiler.compile(cfg, target)`` instead: the keyword
+    defaults this function hard-coded are now explicit :class:`Target`
+    descriptors (``NX2100`` reproduces these defaults exactly), and the
+    compiler additionally binds every layer to a registered engine and
+    validates the VMEM budget.  This shim preserves the PRE-compiler
+    behavior verbatim: it runs stages 1-3 only
+    (``compiler.plan_pipeline``) — no engine binding, no VMEM
+    validation/re-placement — so existing callers keep their exact
+    placements for any budget.  ``compile()`` adds the new checks.
     """
-    if tb_budget is None:
-        tb_budget = bounds.NX2100_TENSOR_BLOCKS // 2
-    if bram_m20ks is None:
-        bram_m20ks = bounds.NX2100_M20KS
-    plans = placement.allocate_parallelism(cfg, tb_budget)
-    plans = placement.hybrid_selection(plans, bram_m20ks, n_pc=n_pc,
-                                       burst=burst)
-    placement.assign_pseudo_channels(plans, n_pc=n_pc)
-
-    laststage = hbm_model.min_laststage_fifo_depth(burst)
-    bm_words = hbm_model.burst_matching_fifo_words(burst)
-    schedules = tuple(
-        LayerSchedule(
-            spec=p.spec,
-            mode=HBM if p.offload else PINNED,
-            p_i=p.p_i, p_o=p.p_o, pc=p.pc,
-            burst=burst,
-            laststage_fifo_depth=laststage,
-            bm_fifo_words=bm_words,
-            n_buffers=n_buffers,
-        ) for p in plans)
-    return PipelinePlan(cfg=cfg, schedules=schedules,
-                        placements=tuple(plans), burst=burst, n_pc=n_pc)
+    warnings.warn(
+        "build_pipeline_plan is deprecated; use repro.compiler.compile("
+        "cfg, target) with a Target descriptor (repro.compiler.NX2100 "
+        "reproduces the old defaults)", DeprecationWarning, stacklevel=2)
+    from repro import compiler
+    changes: Dict[str, object] = dict(burst=burst, n_pc=n_pc,
+                                      n_buffers=n_buffers)
+    if tb_budget is not None:
+        changes["tb_budget"] = tb_budget
+    if bram_m20ks is not None:
+        changes["bram_m20ks"] = bram_m20ks
+    return compiler.plan_pipeline(cfg, compiler.NX2100.replace(**changes))

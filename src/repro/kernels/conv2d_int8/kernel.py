@@ -105,19 +105,75 @@ def _conv_stream_kernel(x_hbm_ref, w_hbm_ref, o_ref, rows_buf, w_buf,
     o_ref[0, 0] = acc
 
 
+def _dwconv_kernel(x_hbm_ref, w_ref, o_ref, rows_buf, sem, *,
+                   k_h: int, k_w: int, stride: int, w_out: int):
+    """Depthwise (grouped, groups == C) variant of ``_conv_kernel``: each
+    channel convolves with its own k_h x k_w filter, so the tap MAC is an
+    elementwise VPU multiply against a broadcast [1, C] weight row instead
+    of an MXU dot — the per-channel tensor chains of a MobileNet engine."""
+    _fill_line_buffer(x_hbm_ref, rows_buf, sem, k_h=k_h, stride=stride)
+    acc = jnp.zeros((w_out, o_ref.shape[-1]), jnp.int32)
+    for i in range(k_h):
+        for j in range(k_w):
+            cols = _row_slice(rows_buf, i, j, stride, w_out)
+            wij = w_ref[i, j]                             # [1, C]
+            acc = acc + cols.astype(jnp.int32) * wij.astype(jnp.int32)
+    o_ref[0, 0] = acc
+
+
+def _dwconv_stream_kernel(x_hbm_ref, w_hbm_ref, o_ref, rows_buf, w_buf,
+                          row_sem, w_sems, *, k_h: int, k_w: int,
+                          stride: int, w_out: int, n_buffers: int):
+    """HBM-streamed depthwise: the (i, j) weight rows ([1, C] taps) flow
+    through the same n_buffers-deep VMEM ring / credit discipline as
+    ``_conv_stream_kernel``, re-read once per output row (Eq. 2)."""
+    _fill_line_buffer(x_hbm_ref, rows_buf, row_sem, k_h=k_h, stride=stride)
+
+    taps = [(i, j) for i in range(k_h) for j in range(k_w)]
+    nb = min(n_buffers, len(taps))
+
+    def dma(t: int):
+        i, j = taps[t]
+        return pltpu.make_async_copy(
+            w_hbm_ref.at[i, j], w_buf.at[t % nb], w_sems.at[t % nb])
+
+    for t in range(nb):
+        dma(t).start()
+
+    acc = jnp.zeros((w_out, o_ref.shape[-1]), jnp.int32)
+    for t, (i, j) in enumerate(taps):
+        dma(t).wait()
+        cols = _row_slice(rows_buf, i, j, stride, w_out)
+        acc = acc + cols.astype(jnp.int32) * w_buf[t % nb].astype(jnp.int32)
+        if t + nb < len(taps):
+            dma(t + nb).start()
+    o_ref[0, 0] = acc
+
+
 def conv2d_int8_kernel(x_padded, w, *, stride: int = 1,
                        stream: bool = False, n_buffers: int = 2,
-                       interpret: bool = False):
+                       depthwise: bool = False, interpret: bool = False):
     """x_padded: [B, H_pad, W_pad, C] int8 (already SAME-padded);
-    w: [k_h, k_w, C, C_out] int8.  Returns [B, H_out, W_out, C_out] int32.
+    w: [k_h, k_w, C, C_out] int8 — or [k_h, k_w, 1, C] HWIO-depthwise when
+    ``depthwise=True`` (the [1, C] tap rows broadcast across the output
+    width; C_out == C).  Returns [B, H_out, W_out, C_out] int32.
 
     ``stream=False`` pins W in VMEM for the whole row sweep (on-chip tier);
     ``stream=True`` leaves W in HBM and re-reads it once per output row
     through an ``n_buffers``-deep double-buffer ring (HBM tier).
     """
     B, H_pad, W_pad, C = x_padded.shape
-    k_h, k_w, C2, C_out = w.shape
-    assert C == C2
+    k_h, k_w, w_cin, w_cout = w.shape
+    if depthwise:
+        assert w_cin == 1 and C == w_cout, (w.shape, C)
+        C_out = C
+        body, stream_body = _dwconv_kernel, _dwconv_stream_kernel
+        ring_tap = (1, C)                       # one [1, C] tap per slot
+    else:
+        assert C == w_cin
+        C_out = w_cout
+        body, stream_body = _conv_kernel, _conv_stream_kernel
+        ring_tap = (C, C_out)                   # one [C, C_out] tap per slot
     H_out = (H_pad - k_h) // stride + 1
     W_out = (W_pad - k_w) // stride + 1
     grid = (B, H_out)
@@ -125,14 +181,17 @@ def conv2d_int8_kernel(x_padded, w, *, stride: int = 1,
     out_spec = pl.BlockSpec((1, 1, W_out, C_out), lambda b, r: (b, r, 0, 0))
     out_shape = jax.ShapeDtypeStruct((B, H_out, W_out, C_out), jnp.int32)
     line_buffer = pltpu.VMEM((k_h, W_pad, C), jnp.int8)
+    compiler_params = tpu_compiler_params(
+        dimension_semantics=("parallel", "arbitrary"))
 
     if not stream:
         return pl.pallas_call(
-            functools.partial(_conv_kernel, **common),
+            functools.partial(body, **common),
             grid=grid,
             in_specs=[
                 pl.BlockSpec(memory_space=pl.ANY),  # activations in HBM
-                pl.BlockSpec((k_h, k_w, C, C_out), lambda b, r: (0, 0, 0, 0)),
+                pl.BlockSpec((k_h, k_w, w_cin, w_cout),
+                             lambda b, r: (0, 0, 0, 0)),
             ],
             out_specs=out_spec,
             out_shape=out_shape,
@@ -141,13 +200,12 @@ def conv2d_int8_kernel(x_padded, w, *, stride: int = 1,
                 pltpu.SemaphoreType.DMA,
             ],
             interpret=interpret,
-            compiler_params=tpu_compiler_params(
-                dimension_semantics=("parallel", "arbitrary")),
+            compiler_params=compiler_params,
         )(x_padded, w)
 
     nb = min(n_buffers, k_h * k_w)
     return pl.pallas_call(
-        functools.partial(_conv_stream_kernel, n_buffers=nb, **common),
+        functools.partial(stream_body, n_buffers=nb, **common),
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),      # activations in HBM
@@ -157,11 +215,10 @@ def conv2d_int8_kernel(x_padded, w, *, stride: int = 1,
         out_shape=out_shape,
         scratch_shapes=[
             line_buffer,
-            pltpu.VMEM((nb, C, C_out), jnp.int8),   # the last-stage FIFO
+            pltpu.VMEM((nb,) + ring_tap, jnp.int8),  # the last-stage FIFO
             pltpu.SemaphoreType.DMA,
             pltpu.SemaphoreType.DMA((nb,)),
         ],
         interpret=interpret,
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=compiler_params,
     )(x_padded, w)

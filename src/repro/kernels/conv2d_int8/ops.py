@@ -18,25 +18,40 @@ from repro.kernels.conv2d_int8.ref import conv2d_int8_ref
 from repro.kernels.quant import requant_epilogue
 
 
+def same_padded_width(n: int, k: int, stride: int) -> int:
+    """Padded extent of one spatial dim under this module's SAME padding.
+    The single source of truth for the kernel's line-buffer geometry —
+    ``_same_pad`` below and the compile-time VMEM accounting
+    (``repro.compiler.engines``) both derive from it, so they cannot
+    desynchronize."""
+    out = -(-n // stride)
+    return n + max((out - 1) * stride + k - n, 0)
+
+
 def _same_pad(x, k_h, k_w, stride):
     B, H, W, C = x.shape
-    out_h = -(-H // stride)
-    out_w = -(-W // stride)
-    pad_h = max((out_h - 1) * stride + k_h - H, 0)
-    pad_w = max((out_w - 1) * stride + k_w - W, 0)
+    pad_h = same_padded_width(H, k_h, stride) - H
+    pad_w = same_padded_width(W, k_w, stride) - W
     return jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "stream", "n_buffers",
-                                             "interpret"))
+                                             "depthwise", "interpret"))
 def conv2d_int8(x, w, *, stride: int = 1, stream: bool = False,
-                n_buffers: int = 2, interpret: bool = False):
-    """SAME conv, int8 in / int32 out, via the line-buffer Pallas kernel."""
+                n_buffers: int = 2, depthwise: bool = False,
+                interpret: bool = False):
+    """SAME conv, int8 in / int32 out, via the line-buffer Pallas kernel.
+
+    ``depthwise=True`` selects the grouped (groups == C) engine for
+    HWIO-depthwise weights ``[k_h, k_w, 1, C]`` — the MobileNet dwconv
+    path, with the same pinned/streamed weight tiers as the dense conv.
+    """
     k_h, k_w = w.shape[:2]
     xp = _same_pad(x, k_h, k_w, stride)
     return conv2d_int8_kernel(xp, w, stride=stride, stream=stream,
-                              n_buffers=n_buffers, interpret=interpret)
+                              n_buffers=n_buffers, depthwise=depthwise,
+                              interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("act_scale", "stride", "relu",

@@ -92,15 +92,16 @@ def _is_residual_add(cfg: CNNConfig, idx: int) -> bool:
     return cfg.name.startswith("resnet")
 
 
-# engine(spec, layer_params, x, relu) -> Optional[(y_q, y_float)].  A layer
-# engine dispatches one layer to a hardware path (Pallas kernels, per the
-# placement plan); returning None falls back to the jnp reference path.
-LayerEngine = Callable[[ConvLayerSpec, Params, jnp.ndarray, bool],
-                       Optional[Tuple[jnp.ndarray, Optional[jnp.ndarray]]]]
+# engine(spec, layer_params, x, relu) -> Optional[(y_q, y_float)].  The
+# per-layer dispatch hook the pipeline executor plugs in: it routes each
+# layer to its compile-time LayerEngine binding (repro.compiler.engines);
+# returning None falls back to the jnp reference path here.
+EngineHook = Callable[[ConvLayerSpec, Params, jnp.ndarray, bool],
+                      Optional[Tuple[jnp.ndarray, Optional[jnp.ndarray]]]]
 
 
 def cnn_forward(params: Params, cfg: CNNConfig, images,
-                engine: Optional[LayerEngine] = None) -> jnp.ndarray:
+                engine: Optional[EngineHook] = None) -> jnp.ndarray:
     """Plain feed-forward execution (the functional reference; the pipeline
     executor in runtime/pipeline.py runs the same layers through the Pallas
     engines by passing ``engine``).
@@ -110,10 +111,11 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
     names emitted by the config builders (``s{i}b{j}c{k}`` / ``...ds``).
 
     ``engine``: per-layer dispatch hook.  When provided, each conv/fc layer
-    is offered to the engine first (which routes it to a pinned or
-    HBM-streamed Pallas kernel per the placement plan); layers the engine
-    declines (returns None for, e.g. depthwise convs) run the jnp path, so
-    topology wiring lives in exactly one place.
+    is offered to the hook first (the pipeline executor routes it to its
+    compile-time engine binding — pinned or HBM-streamed Pallas kernels,
+    including the grouped depthwise engine); layers the hook declines
+    (returns None for — e.g. layers unknown to the plan) run the jnp path,
+    so topology wiring lives in exactly one place.
     """
 
     def apply_layer(spec: ConvLayerSpec, x, relu: bool = True):

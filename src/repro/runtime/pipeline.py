@@ -1,113 +1,74 @@
 """Layer-pipelined CNN inference executor — the running H2PIPE system.
 
-``build_pipeline_plan`` (core/schedule.py) decides, per layer, whether the
-weight buffer lives on chip or streams from HBM; this module *executes* a
-CNN under that plan.  Each conv layer dispatches to the ``conv2d_int8``
-Pallas engine — weights pinned in VMEM (the M20K tier) or double-buffered
-from HBM through the kernel's DMA ring (the pseudo-channel tier) — and
-1x1 fc heads reuse the ``stream_matmul`` machinery (``pinned`` vs the
-explicit-FIFO ``fifo`` mode).  Topology wiring (residual adds, maxpool,
-global-average-pool) stays in ``models.cnn.cnn_forward``; the executor
-plugs in as its ``engine`` hook, so the pipelined execution is the SAME
-network the functional reference runs — outputs are bit-identical.
+``repro.compiler.compile(cfg, target)`` decides, per layer, which
+registered :class:`~repro.compiler.engines.LayerEngine` runs it and
+whether its weight buffer lives on chip or streams from HBM; this module
+*executes* a CNN under that :class:`CompiledPipeline`.  Dispatch is
+table-driven: the executor looks up each layer's compile-time engine
+binding and calls it with a per-run :class:`EngineContext` — there is no
+if/elif kernel selection here and no shared mutable state, so one
+executor (or one compiled pipeline) can serve concurrent requests.
+
+Topology wiring (residual adds, maxpool, global-average-pool) stays in
+``models.cnn.cnn_forward``; the executor plugs in as its ``engine`` hook,
+so the pipelined execution is the SAME network the functional reference
+runs — outputs are bit-identical.
 
 The report cross-checks three views of the weight path that the paper
 keeps consistent by construction:
-  * executed:   streamed words counted at kernel dispatch (Eq. 2 traffic);
+  * executed:   streamed words counted at engine dispatch (Eq. 2 traffic);
   * analytic:   the plan's ``weight_words_per_image`` (Eq. 2 formula);
   * simulated:  ``fifo_sim`` credit-mode delivery + tail-stall prediction
                 over the same per-row word demands (§V-A).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple, Union
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import fifo_sim
-from repro.core.schedule import HBM, PINNED, LayerSchedule, PipelinePlan
+from repro.compiler.engines import EngineContext, LayerExecStats, get_engine
+from repro.compiler.pipeline import (CompiledPipeline, ExecutionReport,
+                                     finalize)
 from repro.configs.cnn import ConvLayerSpec
-from repro.kernels.conv2d_int8.ops import conv2d_int8
+from repro.core.schedule import PipelinePlan
 from repro.kernels.pallas_compat import resolve_interpret
-from repro.kernels.quant import requant_epilogue
-from repro.kernels.stream_matmul.ops import stream_matmul
 from repro.models.cnn import cnn_forward, init_cnn_params
+
+__all__ = ["PipelineExecutor", "ExecutionReport", "LayerExecStats",
+           "execute_cnn"]
 
 Params = Dict[str, Any]
 
 
-def _block(n: int, cap: int) -> int:
-    """Largest divisor of n not exceeding cap (Pallas block sizing)."""
-    for b in range(min(n, cap), 0, -1):
-        if n % b == 0:
-            return b
-    return 1
-
-
-# the ONE dequant+bias+relu+requant epilogue (kernels/quant.py), jitted so
-# its float ops compile exactly like the reference path's
-_requant = functools.partial(jax.jit, static_argnames=("act_scale", "relu"))(
-    requant_epilogue)
-
-
-@dataclass
-class LayerExecStats:
-    name: str
-    mode: str                     # "pinned" | "hbm"
-    kernel: str                   # "conv2d_int8" | "stream_matmul" | "jnp"
-    hbm_words: int = 0            # Eq. 2 words streamed for this dispatch
-
-
-@dataclass
-class ExecutionReport:
-    plan: PipelinePlan
-    images: int = 0
-    layers: List[LayerExecStats] = field(default_factory=list)
-
-    @property
-    def hbm_weight_words(self) -> Dict[str, int]:
-        """Total streamed weight words per layer for the whole batch."""
-        out: Dict[str, int] = {}
-        for st in self.layers:
-            if st.mode == HBM:
-                out[st.name] = out.get(st.name, 0) + st.hbm_words
-        return out
-
-    @property
-    def total_hbm_words(self) -> int:
-        return sum(self.hbm_weight_words.values())
-
-    @property
-    def streamed_layer_count(self) -> int:
-        return len({st.name for st in self.layers if st.mode == HBM})
-
-    def fifo_prediction(self, outputs_needed: int = 32,
-                        word_scale: Optional[int] = None
-                        ) -> fifo_sim.SimOutcome:
-        """§V-A credit-mode stall/delivery prediction for the streamed set."""
-        return self.plan.predict_stalls(outputs_needed, word_scale)
-
-    def modelled_throughput(self) -> Dict[str, float]:
-        return self.plan.throughput()
-
-
 class PipelineExecutor:
-    """Executes a CNN end-to-end under a ``PipelinePlan``.
+    """Executes a CNN end-to-end under a :class:`CompiledPipeline`.
 
-    ``interpret=None`` auto-selects Pallas interpret mode off-TPU
-    (pallas_compat), so the same executor runs on CPU CI and real TPUs.
+    ``interpret=None`` defers to the compiled target's backend (and from
+    there to pallas_compat auto-detection), so the same executor runs on
+    CPU CI and real TPUs.  A bare :class:`PipelinePlan` (the deprecated
+    ``build_pipeline_plan`` output) is accepted and gets engines bound on
+    the fly, without target budget enforcement.
+
+    Re-entrancy: ``run`` threads all per-execution state (the report,
+    the interpret flag, the activation scale) through an
+    :class:`EngineContext` created per call — concurrent ``run``\\ s on
+    one executor cannot corrupt each other's accounting.
     """
 
-    def __init__(self, plan: PipelinePlan, *, interpret: Optional[bool] = None,
-                 act_scale: float = 0.05):
-        self.plan = plan
+    def __init__(self, compiled: Union[CompiledPipeline, PipelinePlan], *,
+                 interpret: Optional[bool] = None, act_scale: float = 0.05):
+        if isinstance(compiled, PipelinePlan):
+            compiled = finalize(compiled, target=None)
+        self.compiled = compiled
+        if interpret is None and compiled.target is not None:
+            interpret = compiled.target.interpret
         self.interpret = resolve_interpret(interpret)
         self.act_scale = act_scale
-        self._report: Optional[ExecutionReport] = None
+
+    @property
+    def plan(self) -> PipelinePlan:
+        return self.compiled.plan
 
     # -- params -------------------------------------------------------------
 
@@ -120,81 +81,25 @@ class PipelineExecutor:
             ) -> Tuple[jnp.ndarray, ExecutionReport]:
         """images: [B,H,W,C] int8 -> (logits [B,classes], report)."""
         report = ExecutionReport(plan=self.plan, images=int(images.shape[0]))
-        self._report = report
-        logits = cnn_forward(params, self.plan.cfg, images,
-                             engine=self._engine)
-        self._report = None
+        ctx = EngineContext(interpret=self.interpret,
+                            act_scale=self.act_scale, stats=report.layers)
+
+        def dispatch(spec: ConvLayerSpec, p: Params, x, relu: bool):
+            asn = self.compiled.assignment_for(spec.name)
+            if asn is None:
+                return None               # layer unknown to the plan
+            sched = self.plan.schedule_for(spec.name)
+            return get_engine(asn.engine).run(ctx, sched, p, x, relu)
+
+        logits = cnn_forward(params, self.plan.cfg, images, engine=dispatch)
         return logits, report
 
     def __call__(self, params: Params, images) -> jnp.ndarray:
         return self.run(params, images)[0]
 
-    # -- per-layer dispatch (models.cnn engine hook) ------------------------
 
-    def _engine(self, spec: ConvLayerSpec, p: Params, x, relu: bool):
-        try:
-            sched = self.plan.schedule_for(spec.name)
-        except KeyError:
-            return None                       # layer unknown to the plan
-        if spec.kind == "dwconv":
-            # the Pallas engine has no feature-group path yet — reference
-            # path executes, so record the mode that actually ran (pinned),
-            # not the plan's wish: accounting reflects execution.
-            self._record(sched, kernel="jnp", batch=0, mode=PINNED)
-            return None
-
-        if spec.kind == "fc" and spec.k_h == 1 and x.ndim == 4 \
-                and x.shape[1] == 1 and x.shape[2] == 1:
-            return self._fc_matmul(sched, p, x, relu)
-        return self._conv(sched, p, x, relu)
-
-    def _conv(self, sched: LayerSchedule, p: Params, x, relu: bool):
-        spec = sched.spec
-        y = conv2d_int8(x, p["w"], stride=spec.stride,
-                        stream=sched.streamed, n_buffers=sched.n_buffers,
-                        interpret=self.interpret)
-        y_q, y_f = _requant(y, p["w_scale"], p["bias"],
-                            act_scale=self.act_scale, relu=relu)
-        out_h = y.shape[1]
-        self._record(sched, kernel="conv2d_int8", batch=int(x.shape[0]),
-                     rows=out_h)
-        return y_q, y_f
-
-    def _fc_matmul(self, sched: LayerSchedule, p: Params, x, relu: bool):
-        spec = sched.spec
-        B = int(x.shape[0])
-        c_in, c_out = spec.c_in, spec.c_out
-        x2 = x.reshape(B, c_in)
-        w2 = p["w"].reshape(c_in, c_out)
-        mode = "fifo" if sched.streamed else "pinned"
-        y = stream_matmul(x2, w2, mode=mode,
-                          bm=_block(B, 128), bk=_block(c_in, 512),
-                          bn=_block(c_out, 128),
-                          n_buffers=max(2, sched.n_buffers),
-                          interpret=self.interpret)
-        y_q, y_f = _requant(y.reshape(B, 1, 1, c_out), p["w_scale"],
-                            p["bias"], act_scale=self.act_scale, relu=relu)
-        self._record(sched, kernel="stream_matmul", batch=B, rows=1)
-        return y_q, y_f
-
-    def _record(self, sched: LayerSchedule, *, kernel: str, batch: int,
-                rows: int = 0, mode: Optional[str] = None) -> None:
-        if self._report is None:
-            return
-        mode = sched.mode if mode is None else mode
-        words = 0
-        if mode == HBM and batch:
-            # Eq. 2 accounting: kernels re-read once per output row, per
-            # image.  (On TPU the matmul amortizes the batch dim; the
-            # paper's accelerator is batch-1, so we report paper units.)
-            words = sched.weight_words_per_row * rows * batch
-        self._report.layers.append(LayerExecStats(
-            name=sched.spec.name, mode=mode, kernel=kernel,
-            hbm_words=words))
-
-
-def execute_cnn(plan: PipelinePlan, params: Params, images, *,
-                interpret: Optional[bool] = None
+def execute_cnn(plan: Union[CompiledPipeline, PipelinePlan], params: Params,
+                images, *, interpret: Optional[bool] = None
                 ) -> Tuple[jnp.ndarray, ExecutionReport]:
     """One-shot convenience: run ``images`` through ``plan``."""
     return PipelineExecutor(plan, interpret=interpret).run(params, images)

@@ -2,19 +2,22 @@
 
 These lock in the paper-facing planner outputs — which layers offload to
 HBM, their pseudo-channel assignment, and the FIFO sizing — for the three
-networks the paper evaluates, at the default NX2100 budgets used by
-``build_pipeline_plan``.  A planner refactor that silently changes any of
-these changes the reproduction's claims; update the goldens only with a
-deliberate re-derivation.
+networks the paper evaluates, at the NX2100 target's default budgets.  A
+compiler refactor that silently changes any of these changes the
+reproduction's claims; update the goldens only with a deliberate
+re-derivation.
 
 Current goldens encode the paper's §VI-A structure: ResNet-18 fits
 entirely on chip (no offload), while ResNet-50 and VGG-16 stream their
 late heavy layers + fc heads, assigned clockwise PCs 0..5.
 """
+import warnings
+
 import pytest
 
+from repro import compiler
+from repro.compiler import NX2100
 from repro.configs import CNN_CONFIGS
-from repro.core import build_pipeline_plan
 
 # name -> (n_layers, [(layer, pc, p_i, p_o), ...] for the offloaded set)
 GOLDEN = {
@@ -41,18 +44,21 @@ GOLDEN = {
 @pytest.mark.parametrize("name", sorted(GOLDEN))
 def test_algorithm1_placement_golden(name):
     n_layers, offloaded = GOLDEN[name]
-    plan = build_pipeline_plan(CNN_CONFIGS[name])
-    assert len(plan.schedules) == n_layers
-    got = [(s.spec.name, s.pc, s.p_i, s.p_o) for s in plan.streamed]
+    cp = compiler.compile(CNN_CONFIGS[name], NX2100)
+    assert len(cp.schedules) == n_layers
+    got = [(s.spec.name, s.pc, s.p_i, s.p_o) for s in cp.plan.streamed]
     assert got == offloaded
+    # stage-5 validation must not have moved anything at the real device
+    # budgets — the goldens are pure Algorithm 1 outputs
+    assert cp.replaced == ()
 
 
 @pytest.mark.parametrize("name", sorted(GOLDEN))
 def test_fifo_sizing_golden(name):
     """§IV-A sizing at burst 8: 512-deep last-stage FIFOs (the paper's
     1214 ns worst-case saturated latency at 300 MHz), 2-burst matching."""
-    plan = build_pipeline_plan(CNN_CONFIGS[name])
-    for s in plan.schedules:
+    cp = compiler.compile(CNN_CONFIGS[name], NX2100)
+    for s in cp.schedules:
         assert s.laststage_fifo_depth == 512
         assert s.bm_fifo_words == 16
         assert s.burst == 8
@@ -61,13 +67,52 @@ def test_fifo_sizing_golden(name):
 def test_resnet18_fits_on_chip():
     """§VI-A: ResNet-18's weights fit in NX2100 BRAM — hybrid selection
     must keep everything pinned at the real device budget."""
-    plan = build_pipeline_plan(CNN_CONFIGS["resnet18"])
-    assert plan.streamed_names == ()
+    cp = compiler.compile(CNN_CONFIGS["resnet18"], NX2100)
+    assert cp.streamed_names == ()
 
 
 def test_offloaded_pcs_clockwise_and_unique():
     for name in ("resnet50", "vgg16"):
-        plan = build_pipeline_plan(CNN_CONFIGS[name])
-        pcs = [s.pc for s in plan.streamed]
+        cp = compiler.compile(CNN_CONFIGS[name], NX2100)
+        pcs = [s.pc for s in cp.plan.streamed]
         assert pcs == sorted(pcs)                  # clockwise in layer order
         assert len(set(pcs)) == len(pcs)           # no PC shared here
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_deprecated_shim_equals_compile(name):
+    """``build_pipeline_plan`` (the deprecation shim) returns a plan EQUAL
+    to ``compile(cfg, NX2100).plan`` at the default budgets — old call
+    sites keep the exact same placements while warning toward the new
+    API."""
+    from repro.core import build_pipeline_plan
+    with pytest.deprecated_call():
+        old = build_pipeline_plan(CNN_CONFIGS[name])
+    assert old == compiler.compile(CNN_CONFIGS[name], NX2100).plan
+
+
+def test_shim_preserves_pre_compiler_placements():
+    """The shim runs stages 1-3 only: unlike compile(), it never applies
+    stage-5 VMEM re-placement, so legacy callers with non-default budgets
+    get the exact pre-compiler placements.  (vgg16 under a huge BRAM
+    budget pins everything — including the 103 MB fc0 buffer compile()
+    would re-place to the HBM tier.)"""
+    from repro.core import build_pipeline_plan
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        plan = build_pipeline_plan(CNN_CONFIGS["vgg16"], bram_m20ks=10**6)
+    assert plan.streamed_names == ()               # pre-PR behavior
+    compiled = compiler.compile(
+        CNN_CONFIGS["vgg16"], NX2100.replace(bram_m20ks=10**6))
+    assert "fc0" in compiled.replaced              # compile() re-places
+
+
+def test_shim_forwards_custom_budgets():
+    """Keyword overrides on the shim map onto Target fields 1:1."""
+    from repro.configs.cnn import mini_resnet18
+    from repro.core import build_pipeline_plan
+    cfg = mini_resnet18(hw=32, width=32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = build_pipeline_plan(cfg, tb_budget=500, bram_m20ks=40)
+    assert old == compiler.compile(cfg, compiler.TPU_INTERPRET).plan
