@@ -1,0 +1,101 @@
+"""Benchmark regression gate: diff two BENCH_pipeline.json artifacts.
+
+Compares the *modelled* numbers — deterministic compiler outputs, not
+wall-clock — between a previous run's artifact and the current one, row
+by row (matched on ``name``):
+
+  * ``model_images_per_s``   may not DROP by more than the threshold;
+  * ``hbm_words_per_image``  may not GROW by more than the threshold.
+
+Wall-clock fields are reported for context but never gate: CI machines
+are too noisy for a hard fail, while the modelled throughput and Eq. 2
+traffic only change when the planner/compiler changes — exactly the
+regressions this gate exists to catch.
+
+  python benchmarks/bench_diff.py PREV.json NEW.json [--threshold 0.05]
+
+Exit status 1 when any gated metric regresses past the threshold (or a
+previously-present row disappeared); 0 otherwise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+# metric -> direction: "down" fails when the value shrinks, "up" when it
+# grows.  Only modelled (deterministic) numbers belong here.
+GATED_METRICS = {
+    "model_images_per_s": "down",
+    "hbm_words_per_image": "up",
+}
+
+
+def _rows_by_name(artifact: Dict) -> Dict[str, Dict]:
+    return {row["name"]: row for row in artifact.get("rows", [])}
+
+
+def compare(prev: Dict, new: Dict, threshold: float
+            ) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes) over the gated modelled metrics."""
+    regressions: List[str] = []
+    notes: List[str] = []
+    prev_rows, new_rows = _rows_by_name(prev), _rows_by_name(new)
+    for name, prow in sorted(prev_rows.items()):
+        nrow = new_rows.get(name)
+        if nrow is None:
+            regressions.append(f"{name}: row disappeared from the artifact")
+            continue
+        for metric, direction in GATED_METRICS.items():
+            if metric not in prow:
+                continue
+            if metric not in nrow:
+                regressions.append(f"{name}: {metric} disappeared")
+                continue
+            old, cur = float(prow[metric]), float(nrow[metric])
+            if old == 0:
+                delta = 0.0 if cur == 0 else float("inf")
+            else:
+                delta = (cur - old) / old
+            worse = delta < -threshold if direction == "down" \
+                else delta > threshold
+            line = (f"{name}: {metric} {old:g} -> {cur:g} "
+                    f"({delta:+.1%}, allowed {threshold:.0%})")
+            if worse:
+                regressions.append(line)
+            elif delta != 0:
+                notes.append(line)
+    for name in sorted(set(new_rows) - set(prev_rows)):
+        notes.append(f"{name}: new row (not gated)")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("prev", help="previous run's BENCH_pipeline.json")
+    ap.add_argument("new", help="this run's BENCH_pipeline.json")
+    ap.add_argument("--threshold", type=float, default=0.05,
+                    help="allowed relative regression (default 5%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.prev) as f:
+        prev = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    regressions, notes = compare(prev, new, args.threshold)
+
+    for line in notes:
+        print(f"note: {line}")
+    if regressions:
+        for line in regressions:
+            print(f"REGRESSION: {line}")
+        print(f"{len(regressions)} modelled-metric regression(s) past "
+              f"{args.threshold:.0%}")
+        return 1
+    print("modelled benchmark numbers within threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

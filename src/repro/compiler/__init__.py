@@ -9,9 +9,12 @@ Public API:
     explicit device resource descriptors;
   * :func:`register_engine` / :class:`LayerEngine` — the pluggable
     per-layer kernel registry (conv2d_int8, dwconv_int8, stream_matmul,
-    jnp_ref built in);
+    res_block_int8, jnp_ref built in; ``is_block = True`` engines bind
+    whole residual blocks as one schedulable unit);
   * :class:`CompiledPipeline` — immutable result: ``engine_table()``,
-    ``vmem_report()``, ``describe()``, ``run()``.
+    ``block_table()``, ``vmem_report()``, ``describe()``, ``run()``
+    (``backend="fused"`` one-dispatch jit per input shape, cached;
+    ``backend="eager"`` per-layer walk).
 
 ``repro.core.build_pipeline_plan`` remains as a deprecation shim over
 ``plan_pipeline(cfg, NX2100.replace(**kwargs))`` — stages 1-3 only,
@@ -21,11 +24,14 @@ binding and VMEM validation on top.
 from repro.compiler.engines import (EngineContext, LayerEngine,  # noqa: F401
                                     LayerExecStats, get_engine,
                                     register_engine, registered_engines,
-                                    select_engine, unregister_engine)
-from repro.compiler.pipeline import (CompileError,  # noqa: F401
-                                     CompiledPipeline, EngineAssignment,
-                                     ExecutionReport, TargetBudgetError,
-                                     compile, finalize, plan_pipeline)
+                                    select_block_engine, select_engine,
+                                    unregister_engine)
+from repro.compiler.pipeline import (BlockAssignment,  # noqa: F401
+                                     CompileError, CompiledPipeline,
+                                     EngineAssignment, ExecutionReport,
+                                     FusedTrace, TargetBudgetError, compile,
+                                     finalize, make_dispatchers,
+                                     plan_pipeline, trace_fused)
 from repro.compiler.target import (DEFAULT_VMEM_BYTES, NX2100,  # noqa: F401
                                    PRESETS, TPU_INTERPRET, Target,
                                    get_target)

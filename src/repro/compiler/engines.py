@@ -17,10 +17,15 @@ and declares
   * ``run(ctx, sched, params, x, relu)``
                                   the actual dispatch.  ``ctx`` is a
                                   per-execution :class:`EngineContext`
-                                  (interpret flag, activation scale, stats
-                                  sink) — engines hold NO mutable state,
-                                  so one compiled pipeline can serve
-                                  concurrent requests.
+                                  (interpret flag, activation scale) —
+                                  engines hold NO mutable state and
+                                  RETURN their :class:`LayerExecStats`
+                                  instead of mutating a sink, so a run
+                                  can be traced into one jitted program
+                                  (stats are shape-static metadata the
+                                  executor aggregates post-hoc) and one
+                                  compiled pipeline can serve concurrent
+                                  requests.
 
 Engines register under a short name with :func:`register_engine`; the
 compiler picks, per layer, the highest-priority registered engine whose
@@ -33,21 +38,28 @@ conv, a Winograd path, an FPGA RTL emitter...) requires no edits here:
         def vmem_bytes(self, spec, sched): ...
         def run(self, ctx, sched, params, x, relu): ...
 
+Block engines (``is_block = True``) bind a whole :class:`ResBlockSpec`
+instead of one layer: ``supports``/``vmem_bytes``/``run`` take the block
+(and the member schedules), and the compiler emits one schedulable unit
+for the group — ``res_block_int8`` fuses a residual block's conv chain,
+downsample, add and relu the way the paper places whole engines.
+
 Built-in engines: ``conv2d_int8`` (dense/pointwise conv + big fc-as-conv
 heads), ``dwconv_int8`` (grouped depthwise — the MobileNet path),
-``stream_matmul`` (1x1 fc heads), ``jnp_ref`` (XLA reference, priority 0
-safety net).
+``stream_matmul`` (1x1 fc heads), ``res_block_int8`` (fused residual
+blocks), ``jnp_ref`` (XLA reference, priority 0 safety net).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.cnn import ConvLayerSpec
+from repro.configs.cnn import ConvLayerSpec, ResBlockSpec
 from repro.core.schedule import HBM, PINNED, LayerSchedule
 from repro.kernels.conv2d_int8.ops import conv2d_int8, same_padded_width
 from repro.kernels.quant import requant_epilogue
@@ -61,8 +73,11 @@ _requant = functools.partial(jax.jit, static_argnames=("act_scale", "relu"))(
     requant_epilogue)
 
 
+@functools.lru_cache(maxsize=None)
 def _block(n: int, cap: int) -> int:
-    """Largest divisor of n not exceeding cap (Pallas block sizing)."""
+    """Largest divisor of n not exceeding cap (Pallas block sizing).
+    Cached: compile() probes this from every ``supports``/``vmem_bytes``
+    call, and the divisor scan is linear in n."""
     for b in range(min(n, cap), 0, -1):
         if n % b == 0:
             return b
@@ -81,34 +96,25 @@ def _padded_width(spec: ConvLayerSpec) -> int:
 # ---------------------------------------------------------------------------
 
 
-@dataclass
+@dataclass(frozen=True)
 class LayerExecStats:
-    """What one layer dispatch did (which engine, which tier, Eq. 2 words)."""
+    """What one layer dispatch did (which engine, which tier, Eq. 2 words).
+
+    Frozen and shape-static: engines *return* these alongside their
+    arrays (every field derives from the schedule and the input shape,
+    never from array values), so collecting them works identically under
+    eager per-layer dispatch and under the whole-pipeline jit trace —
+    one trace yields the stats template every warm run reuses."""
 
     name: str
     mode: str                     # "pinned" | "hbm"
     kernel: str                   # engine name that actually ran
     hbm_words: int = 0            # Eq. 2 words streamed for this dispatch
 
-
-@dataclass
-class EngineContext:
-    """Per-execution state threaded through every engine call.
-
-    Created fresh by each ``PipelineExecutor.run`` (never shared between
-    runs), so concurrent executions of one compiled pipeline cannot
-    corrupt each other's reports — the re-entrancy contract batched
-    serving builds on.
-    """
-
-    interpret: bool
-    act_scale: float
-    stats: Optional[List[LayerExecStats]] = field(default=None)
-
-    def record(self, sched: LayerSchedule, *, kernel: str, batch: int,
-               rows: int = 0, mode: Optional[str] = None) -> None:
-        if self.stats is None:
-            return
+    @classmethod
+    def for_dispatch(cls, sched: LayerSchedule, *, kernel: str, batch: int,
+                     rows: int = 0, mode: Optional[str] = None
+                     ) -> "LayerExecStats":
         mode = sched.mode if mode is None else mode
         words = 0
         if mode == HBM and batch:
@@ -116,8 +122,23 @@ class EngineContext:
             # image.  (On TPU the matmul amortizes the batch dim; the
             # paper's accelerator is batch-1, so we report paper units.)
             words = sched.weight_words_per_row * rows * batch
-        self.stats.append(LayerExecStats(
-            name=sched.spec.name, mode=mode, kernel=kernel, hbm_words=words))
+        return cls(name=sched.spec.name, mode=mode, kernel=kernel,
+                   hbm_words=words)
+
+
+@dataclass(frozen=True)
+class EngineContext:
+    """Per-execution configuration threaded through every engine call.
+
+    Frozen and side-effect free: engines read the interpret flag and the
+    activation scale from it and return everything they produce —
+    including :class:`LayerExecStats` — so one context can sit inside a
+    jit trace, and concurrent executions of one compiled pipeline cannot
+    corrupt each other's reports (the re-entrancy contract batched
+    serving builds on)."""
+
+    interpret: bool
+    act_scale: float
 
 
 # ---------------------------------------------------------------------------
@@ -132,7 +153,13 @@ class LayerEngine(Protocol):
     Engines may additionally declare ``can_stream = False`` (default
     True) when they cannot source weights from the HBM tier; stage 5
     keeps such bindings pinned so plan analytics never charge Eq. 2
-    traffic an engine will not execute."""
+    traffic an engine will not execute.
+
+    Engines declaring ``is_block = True`` bind a whole
+    :class:`ResBlockSpec` instead of one layer; their methods take the
+    block (and a tuple of member schedules, in ``block.members`` order)
+    and ``run`` returns ``(int8 activations, per-member stats tuple)``.
+    """
 
     name: str
 
@@ -146,8 +173,9 @@ class LayerEngine(Protocol):
 
     def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
             x: jnp.ndarray, relu: bool
-            ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-        """Execute the layer; returns (int8 activations, float pre-quant)."""
+            ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], LayerExecStats]:
+        """Execute the layer; returns (int8 activations, float pre-quant,
+        dispatch stats).  Stats are shape-static — safe under a trace."""
         ...
 
 
@@ -203,12 +231,25 @@ def registered_engines() -> Dict[str, LayerEngine]:
 
 
 def select_engine(spec: ConvLayerSpec) -> LayerEngine:
-    """The compile-time choice: highest-priority engine claiming the spec."""
+    """The compile-time choice: highest-priority engine claiming the spec.
+    Block engines (``is_block``) bind groups, not layers — skipped here."""
     for eng in registered_engines().values():
+        if getattr(eng, "is_block", False):
+            continue
         if eng.supports(spec):
             return eng
     raise LookupError(f"no registered engine supports layer {spec.name!r} "
                       f"(kind={spec.kind!r})")
+
+
+def select_block_engine(block: ResBlockSpec) -> Optional[LayerEngine]:
+    """Highest-priority *block* engine claiming the residual block, or
+    None — in which case the block's layers keep their per-layer
+    bindings (the always-valid fallback)."""
+    for eng in registered_engines().values():
+        if getattr(eng, "is_block", False) and eng.supports(block):
+            return eng
+    return None
 
 
 def _is_1x1_fc(spec: ConvLayerSpec) -> bool:
@@ -279,9 +320,10 @@ class Conv2DInt8Engine:
                         depthwise=self.depthwise, interpret=ctx.interpret)
         y_q, y_f = _requant(y, params["w_scale"], params["bias"],
                             act_scale=ctx.act_scale, relu=relu)
-        ctx.record(sched, kernel=self.name, batch=int(x.shape[0]),
-                   rows=int(y.shape[1]))
-        return y_q, y_f
+        stats = LayerExecStats.for_dispatch(
+            sched, kernel=self.name, batch=int(x.shape[0]),
+            rows=int(y.shape[1]))
+        return y_q, y_f, stats
 
 
 # the grouped depthwise path is the same engine with the flag flipped
@@ -324,8 +366,9 @@ class StreamMatmulFCEngine:
         y_q, y_f = _requant(y.reshape(B, 1, 1, c_out), params["w_scale"],
                             params["bias"], act_scale=ctx.act_scale,
                             relu=relu)
-        ctx.record(sched, kernel=self.name, batch=B, rows=1)
-        return y_q, y_f
+        stats = LayerExecStats.for_dispatch(sched, kernel=self.name,
+                                            batch=B, rows=1)
+        return y_q, y_f, stats
 
 
 @register_engine("jnp_ref", priority=0)
@@ -351,5 +394,71 @@ class JnpReferenceEngine:
         from repro.models.cnn import conv_layer_forward
         y_q, y_f = conv_layer_forward(params, sched.spec, x,
                                       act_scale=ctx.act_scale, relu=relu)
-        ctx.record(sched, kernel=self.name, batch=0, mode=PINNED)
-        return y_q, y_f
+        stats = LayerExecStats.for_dispatch(sched, kernel=self.name,
+                                            batch=0, mode=PINNED)
+        return y_q, y_f, stats
+
+
+@register_engine("res_block_int8", priority=10)
+class ResBlockInt8Engine:
+    """A whole residual block — conv chain, identity downsample, int32
+    add, clip and relu — as ONE schedulable unit, the granularity the
+    paper actually places: an engine is a block of fabric, not a Python
+    loop iteration.  Member convs execute on their per-layer engines
+    (pinned or HBM-streamed per the member schedules), the join runs
+    in-engine, and the unit reports per-member Eq. 2 stats under this
+    engine's name — the compile-time binding is exactly what runs.
+
+    The block claims the SUM of its members' working sets plus the
+    identity buffer (the skip path holds the block input while the conv
+    chain runs); ``compile()`` only binds the block when that total fits
+    the target's VMEM budget, else the layers keep per-layer bindings.
+    """
+
+    is_block = True
+
+    def _member_engines(self, block: ResBlockSpec):
+        return [select_engine(m) for m in block.members]
+
+    def supports(self, block: ResBlockSpec) -> bool:
+        # every member must land on a Pallas conv engine: a jnp_ref (or
+        # otherwise non-conv) member means the block's padding/precision
+        # contract is not the line-buffer kernel's, so bind per-layer.
+        if not block.convs:
+            return False
+        return all(eng.name in ("conv2d_int8", "dwconv_int8")
+                   for eng in self._member_engines(block))
+
+    def vmem_bytes(self, block: ResBlockSpec,
+                   scheds: Tuple[LayerSchedule, ...]) -> int:
+        first = block.convs[0]
+        identity = first.in_h * first.in_w * first.c_in          # int8 skip
+        members = sum(
+            eng.vmem_bytes(s.spec, s)
+            for eng, s in zip(self._member_engines(block), scheds))
+        return members + identity
+
+    def run(self, ctx: EngineContext, block: ResBlockSpec,
+            scheds: Tuple[LayerSchedule, ...], params: Params, x
+            ) -> Tuple[jnp.ndarray, Tuple[LayerExecStats, ...]]:
+        by_name = {s.spec.name: s for s in scheds}
+        stats: List[LayerExecStats] = []
+
+        def member(spec: ConvLayerSpec, xin, relu: bool):
+            y_q, _, st = select_engine(spec).run(
+                ctx, by_name[spec.name], params[spec.name], xin, relu)
+            # the block IS the binding: members report under its name
+            stats.append(dataclasses.replace(st, kernel=self.name))
+            return y_q
+
+        h = x
+        last = len(block.convs) - 1
+        for ci, cspec in enumerate(block.convs):
+            h = member(cspec, h, relu=ci != last)
+        identity = x
+        if block.ds is not None:
+            identity = member(block.ds, identity, relu=False)
+        y = h.astype(jnp.int32) + identity.astype(jnp.int32)
+        y = jnp.clip(y, -127, 127).astype(jnp.int8)
+        y = jnp.where(y > 0, y, 0)                    # relu on int8
+        return y, tuple(stats)

@@ -16,18 +16,36 @@ an explicit pass over explicit values:
   4. **engine select** every layer is bound to a registered
                        :class:`~repro.compiler.engines.LayerEngine` —
                        the binding is *visible* (``engine_table()``)
-                       before anything executes;
+                       before anything executes; residual blocks whose
+                       members all land on Pallas conv engines are
+                       additionally bound as ONE schedulable unit to a
+                       block engine (``res_block_int8``), with the
+                       unit's own VMEM cost and Eq. 2 words;
   5. **validation**    each binding's ``vmem_bytes`` is checked against
                        ``target.vmem_bytes``.  A pinned layer that does
                        not fit is re-placed to the HBM tier when its
                        streamed working set does; layers that fit in
                        neither tier abort compilation with a
                        :class:`TargetBudgetError` carrying the full
-                       per-layer VMEM report.
+                       per-layer VMEM report.  Over-budget *block* units
+                       simply fall back to their per-layer bindings;
+  6. **trace**         the whole engine table is closed over
+                       ``models.cnn.cnn_forward`` and compiled into ONE
+                       ``jax.jit`` program per (input shape, dtype):
+                       a warm ``run()`` is a single XLA dispatch, not a
+                       Python walk over ~20 engine calls.  Tracing once
+                       also yields the run's :class:`LayerExecStats`
+                       (shape-static, so engines return them instead of
+                       mutating a sink) — the template every warm run's
+                       :class:`ExecutionReport` is built from.  Traces
+                       are cached on the :class:`CompiledPipeline`; the
+                       per-layer walk survives as ``backend="eager"``
+                       (bit-identical, for debugging).
 
 The result is immutable and reusable: ``CompiledPipeline.executor()``
-(or ``.run``) executes it, ``engine_table()``/``vmem_report()`` expose
-the decisions, ``with_offload()`` recompiles with a forced offload set.
+(or ``.run``) executes it, ``engine_table()``/``vmem_report()``/
+``block_table()`` expose the decisions, ``with_offload()`` recompiles
+with a forced offload set.
 
 Migration: ``repro.core.build_pipeline_plan(cfg, **kw)`` is now a
 deprecation shim over ``plan_pipeline(cfg, NX2100.replace(**kw))`` —
@@ -38,14 +56,17 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
 
 from repro.compiler.engines import (EngineContext,  # noqa: F401 (re-export)
                                     LayerExecStats, get_engine,
-                                    select_engine)
+                                    select_block_engine, select_engine)
 from repro.compiler.target import NX2100, Target
-from repro.configs.cnn import CNNConfig
+from repro.configs.cnn import CNNConfig, residual_blocks
 from repro.core import fifo_sim, hbm_model, placement
 from repro.core.schedule import (HBM, PINNED, LayerSchedule, PipelinePlan)
 
@@ -73,12 +94,38 @@ class TargetBudgetError(CompileError):
 
 @dataclass(frozen=True)
 class EngineAssignment:
-    """The compile-time binding of one layer to one registered engine."""
+    """The compile-time binding of one layer to one registered engine.
+    ``block`` names the fused block unit owning the layer, when stage 4
+    grouped it into one (the layer then dispatches at block granularity,
+    under the block engine's name)."""
 
     layer: str
     engine: str                   # registry name (resolved at dispatch)
     mode: str                     # PINNED | HBM
     vmem_bytes: int               # working set the binding claims
+    block: Optional[str] = None   # owning block unit, if any
+
+
+@dataclass(frozen=True)
+class BlockAssignment:
+    """One fused block unit: several layers bound to a single block
+    engine, placed and costed together (the paper's engine granularity).
+    """
+
+    block: str                    # block name ("s0b0")
+    engine: str                   # block engine registry name
+    members: Tuple[str, ...]      # member layer names, config order
+    vmem_bytes: int               # whole-unit working set
+    hbm_words_per_image: int      # Eq. 2 words of the streamed members
+
+
+@dataclass(frozen=True)
+class FusedTrace:
+    """One stage-6 artifact: the XLA executable for a concrete input
+    shape plus the stats template its trace produced."""
+
+    fn: Callable                  # AOT-compiled (params, images) -> logits
+    stats: Tuple[LayerExecStats, ...]
 
 
 @dataclass(frozen=True)
@@ -89,12 +136,39 @@ class CompiledPipeline:
     target: Optional[Target]
     assignments: Tuple[EngineAssignment, ...]
     replaced: Tuple[str, ...] = ()    # layers stage 5 moved pin -> stream
+    block_assignments: Tuple[BlockAssignment, ...] = ()
+
+    def __post_init__(self):
+        # the stage-6 trace cache + its lock are created EAGERLY (not
+        # via cached_property, whose lazy first evaluation races on
+        # Python >= 3.12) so concurrent run()s on a fresh pipeline
+        # always see the same lock and the same dict.  Frozen
+        # dataclasses permit object.__setattr__ into __dict__.
+        object.__setattr__(self, "_fused_cache", {})
+        object.__setattr__(self, "_fused_lock", threading.Lock())
 
     # -- introspection ------------------------------------------------------
 
     def engine_table(self) -> Dict[str, str]:
         """layer name -> registered engine name, in pipeline order."""
         return {a.layer: a.engine for a in self.assignments}
+
+    def block_table(self) -> Dict[str, Tuple[str, ...]]:
+        """fused block unit -> member layer names, in pipeline order."""
+        return {b.block: b.members for b in self.block_assignments}
+
+    def block_for(self, name: str) -> Optional[BlockAssignment]:
+        """The block unit a block (or member layer) name belongs to."""
+        return self._block_index.get(name)
+
+    @functools.cached_property
+    def _block_index(self) -> Dict[str, BlockAssignment]:
+        idx: Dict[str, BlockAssignment] = {}
+        for b in self.block_assignments:
+            idx[b.block] = b
+            for m in b.members:
+                idx[m] = b
+        return idx
 
     def vmem_report(self) -> Dict[str, int]:
         """layer name -> working-set bytes of its engine binding."""
@@ -157,14 +231,46 @@ class CompiledPipeline:
     # -- execution ----------------------------------------------------------
 
     def executor(self, *, interpret: Optional[bool] = None,
-                 act_scale: float = 0.05):
+                 act_scale: float = 0.05, backend: str = "fused"):
         from repro.runtime.pipeline import PipelineExecutor
         return PipelineExecutor(self, interpret=interpret,
-                                act_scale=act_scale)
+                                act_scale=act_scale, backend=backend)
 
-    def run(self, params, images, *, interpret: Optional[bool] = None):
+    def run(self, params, images, *, interpret: Optional[bool] = None,
+            backend: str = "fused"):
         """One-shot: (logits, ExecutionReport) for ``images``."""
-        return self.executor(interpret=interpret).run(params, images)
+        return self.executor(interpret=interpret,
+                             backend=backend).run(params, images)
+
+    # -- stage 6: the fused whole-pipeline trace ----------------------------
+    # _fused_cache: (shape, dtype, interpret, act_scale) -> FusedTrace,
+    # created in __post_init__ so it lives with the pipeline and every
+    # executor (and thread) shares the compilations.
+
+    @property
+    def trace_count(self) -> int:
+        """How many distinct (shape, dtype, config) traces stage 6 has
+        compiled — a warm shape must NOT retrace (tested)."""
+        return len(self._fused_cache)
+
+    def fused_trace(self, params, images, *, interpret: bool,
+                    act_scale: float) -> FusedTrace:
+        """The stage-6 artifact for this input shape: one jitted XLA
+        program closing the whole engine table over ``cnn_forward``,
+        plus the stats template collected while tracing it.  Cached per
+        (shape, dtype, interpret, act_scale); thread-safe so concurrent
+        ``run()``\\ s on one pipeline share a single compilation."""
+        key = (tuple(images.shape), str(images.dtype), interpret, act_scale)
+        hit = self._fused_cache.get(key)
+        if hit is not None:
+            return hit
+        with self._fused_lock:
+            hit = self._fused_cache.get(key)
+            if hit is None:
+                hit = trace_fused(self, params, images, interpret=interpret,
+                                  act_scale=act_scale)
+                self._fused_cache[key] = hit
+        return hit
 
 
 @dataclass
@@ -312,11 +418,107 @@ def finalize(plan: PipelinePlan, target: Optional[Target], *,
         raise TargetBudgetError(
             target, {a.layer: a.vmem_bytes for a in assignments}, offenders,
             reason)
+
+    # residual blocks whose members all sit on Pallas conv engines become
+    # ONE schedulable unit under a block engine (the paper's granularity:
+    # an engine is a block of fabric).  The unit claims the sum of its
+    # members' working sets + the identity buffer; when that exceeds the
+    # target's VMEM ceiling, the block simply keeps per-layer bindings.
+    blocks: List[BlockAssignment] = []
+    by_layer = {a.layer: i for i, a in enumerate(assignments)}
+    for blk in residual_blocks(plan.cfg):
+        beng = select_block_engine(blk)
+        if beng is None:
+            continue
+        scheds = plan.schedules_for([m.name for m in blk.members])
+        vb = beng.vmem_bytes(blk, scheds)
+        if target is not None and vb > target.vmem_bytes:
+            continue
+        blocks.append(BlockAssignment(
+            block=blk.name, engine=beng.name,
+            members=tuple(m.name for m in blk.members), vmem_bytes=vb,
+            hbm_words_per_image=sum(s.weight_words_per_image
+                                    for s in scheds if s.streamed)))
+        for m in blk.members:
+            i = by_layer[m.name]
+            assignments[i] = dataclasses.replace(
+                assignments[i], engine=beng.name, block=blk.name)
+
     return CompiledPipeline(plan=plan, target=target,
                             assignments=tuple(assignments),
-                            replaced=tuple(moved))
+                            replaced=tuple(moved),
+                            block_assignments=tuple(blocks))
+
+
+def make_dispatchers(compiled: CompiledPipeline, ctx: EngineContext,
+                     collect: Optional[List[LayerExecStats]]
+                     ) -> Tuple[Callable, Callable]:
+    """The (layer, block) dispatch hooks ``cnn_forward`` routes through:
+    each offered layer/block executes on its compile-time binding, with
+    the returned :class:`LayerExecStats` appended to ``collect``.  Used
+    by both the eager per-layer walk (collecting per call) and the
+    stage-6 trace (collecting once, at trace time)."""
+    plan = compiled.plan
+
+    def dispatch(spec, p, x, relu: bool):
+        asn = compiled.assignment_for(spec.name)
+        if asn is None or asn.block is not None:
+            # unknown to the plan, or owned by a fused block unit (the
+            # block hook handles it) -> decline, jnp reference runs it
+            return None
+        y_q, y_f, st = get_engine(asn.engine).run(
+            ctx, plan.schedule_for(spec.name), p, x, relu)
+        if collect is not None:
+            collect.append(st)
+        return y_q, y_f
+
+    def block_dispatch(block, params, x):
+        basn = compiled.block_for(block.name)
+        if basn is None:
+            return None
+        scheds = plan.schedules_for(basn.members)
+        y, stats = get_engine(basn.engine).run(ctx, block, scheds, params, x)
+        if collect is not None:
+            collect.extend(stats)
+        return y
+
+    return dispatch, block_dispatch
+
+
+def trace_fused(compiled: CompiledPipeline, params, images, *,
+                interpret: bool, act_scale: float) -> FusedTrace:
+    """Stage 6: close the engine table over ``cnn_forward`` and compile
+    the WHOLE pipeline into one XLA program for this input shape.
+
+    The single trace also runs every dispatch hook once, which is where
+    the :class:`LayerExecStats` come from: engines return them as
+    shape-static metadata, so the trace yields both the executable and
+    the exact stats template every warm run reports (executed Eq. 2
+    words from the traced counters; analytic words stay on the plan).
+
+    ``images`` is donated to the executable on real backends (the
+    activation buffer is dead after dispatch); under the interpreter /
+    CPU, donation is skipped so callers can reuse input arrays.
+    """
+    from repro.models.cnn import cnn_forward
+
+    ctx = EngineContext(interpret=interpret, act_scale=act_scale)
+    stats: List[LayerExecStats] = []
+    dispatch, block_dispatch = make_dispatchers(compiled, ctx, stats)
+    cfg = compiled.plan.cfg
+
+    def forward(p, x):
+        return cnn_forward(p, cfg, x, engine=dispatch,
+                           block_engine=block_dispatch)
+
+    donate = () if interpret else (1,)
+    jitted = jax.jit(forward, donate_argnums=donate)
+    fn = jitted.lower(params, images).compile()     # the ONE trace
+    return FusedTrace(fn=fn, stats=tuple(stats))
 
 
 def compile(cfg: CNNConfig, target: Target = NX2100) -> CompiledPipeline:
-    """Compile a CNN for a target: all five passes, validated, executable."""
+    """Compile a CNN for a target: passes 1-5 up front, validated and
+    executable; the stage-6 fused trace is instantiated (and cached) per
+    input shape on first ``run()``."""
     return finalize(plan_pipeline(cfg, target), target)

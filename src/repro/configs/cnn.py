@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -108,6 +108,55 @@ class CNNConfig:
                 k_h=k_h, k_w=k_w, stride=stride))
             h, w = max(1, h // stride), max(1, w // stride)
         return CNNConfig(self.name + "-reduced", tuple(small), num_classes=10)
+
+
+@dataclass(frozen=True)
+class ResBlockSpec:
+    """One residual block as a schedulable unit: the conv chain, the
+    optional pointwise downsample on the identity path, and the add+relu
+    join.  H2PIPE places whole engines, not abstract layers — grouping
+    the block lets the compiler bind it to a single fused engine
+    (``res_block_int8``) with its own VMEM cost and Eq. 2 accounting."""
+
+    name: str                           # "s{i}b{j}" block prefix
+    convs: Tuple[ConvLayerSpec, ...]    # main-path convs, pipeline order
+    ds: Optional[ConvLayerSpec]         # identity-path downsample (or None)
+
+    @property
+    def members(self) -> Tuple[ConvLayerSpec, ...]:
+        """All member layers in config order (convs then downsample —
+        the order the config builders emit them)."""
+        return self.convs + ((self.ds,) if self.ds is not None else ())
+
+
+def residual_blocks(cfg: "CNNConfig") -> Tuple[ResBlockSpec, ...]:
+    """Group a ResNet-family config's layers into residual blocks, by the
+    same ``s{i}b{j}c{k}`` / ``...ds`` naming walk ``cnn_forward`` wires
+    the adds with — the single source of truth for block membership that
+    both the model topology and the compiler's block binding share.
+    Non-ResNet configs (no block structure) return ()."""
+    if not cfg.name.startswith("resnet"):
+        return ()
+    blocks: List[ResBlockSpec] = []
+    layers = list(cfg.layers)
+    i = 0
+    while i < len(layers):
+        name = layers[i].name
+        if not (name[0] == "s" and "b" in name and "c" in name):
+            i += 1
+            continue
+        prefix = name[:name.index("c")]
+        members = [layers[i]]
+        j = i + 1
+        while j < len(layers) and layers[j].name.startswith(prefix):
+            members.append(layers[j])
+            j += 1
+        ds = [m for m in members if m.name.endswith("ds")]
+        convs = tuple(m for m in members if not m.name.endswith("ds"))
+        blocks.append(ResBlockSpec(name=prefix, convs=convs,
+                                   ds=ds[0] if ds else None))
+        i = j
+    return tuple(blocks)
 
 
 # ---------------------------------------------------------------------------
@@ -264,7 +313,8 @@ def _mobilenet_v3() -> CNNConfig:
     return CNNConfig("mobilenetv3", tuple(layers))
 
 
-def mini_resnet18(hw: int = 32, width: int = 32) -> CNNConfig:
+def mini_resnet18(hw: int = 32, width: int = 32,
+                  stages: int = 2) -> CNNConfig:
     """ResNet-18-topology network sized for *executable* pipeline demos:
     small enough that the Pallas engines run in interpret mode on CPU, yet
     with multi-M20K weight buffers so Eq. 1 scores go positive and
@@ -272,29 +322,41 @@ def mini_resnet18(hw: int = 32, width: int = 32) -> CNNConfig:
     take minutes per image under the interpreter).
 
     Structure mirrors ``_resnet(18)``: stride-1 3x3 stem (+ the model's
-    maxpool halving), two stages of two basic blocks with a stride-2
-    transition and pwconv downsample, then an fc head.
+    maxpool halving), ``stages`` stages (up to ResNet-18's four) of two
+    basic blocks each, with stride-2 transitions and pwconv downsamples,
+    then an fc head.  ``stages=4`` gives the full 21-engine pipeline
+    depth at executable scale — the shape the dispatch-overhead
+    benchmark uses.
     """
+    if not 1 <= stages <= 4:
+        raise ValueError("mini_resnet18 supports 1..4 stages")
     layers: List[ConvLayerSpec] = []
     layers.append(ConvLayerSpec("stem", "conv", 3, 3, 3, width, 1, hw, hw))
     h = w = hw // 2                    # model applies 3x3 maxpool stride 2
     c_in = width
-    stages = [(width, 2), (width * 2, 2)]
-    for si, (c, blocks) in enumerate(stages):
+    for si, (c, blocks) in enumerate(
+            [(width * 2 ** min(s, 3), 2) for s in range(stages)]):
         for b in range(blocks):
             stride = 2 if (si > 0 and b == 0) else 1
+            in_h, in_w = h, w
             if stride == 2:
-                h //= 2
-                w //= 2
+                if (h > 1 and h % 2) or (w > 1 and w % 2):
+                    # an odd map would make ConvLayerSpec.out_h (floor)
+                    # diverge from the kernels' SAME output (ceil) —
+                    # reject rather than desynchronize Eq. 2 accounting
+                    raise ValueError(
+                        f"mini_resnet18: stride-2 transition on an odd "
+                        f"{h}x{w} map; pick hw so maps stay even (or 1) "
+                        f"through all {stages} stages")
+                h, w = max(1, h // 2), max(1, w // 2)   # even or 1x1: exact
             layers.append(ConvLayerSpec(
-                f"s{si}b{b}c0", "conv", 3, 3, c_in, c, stride,
-                h * stride, w * stride))
+                f"s{si}b{b}c0", "conv", 3, 3, c_in, c, stride, in_h, in_w))
             layers.append(ConvLayerSpec(
                 f"s{si}b{b}c1", "conv", 3, 3, c, c, 1, h, w))
             if stride == 2 or c_in != c:
                 layers.append(ConvLayerSpec(
                     f"s{si}b{b}ds", "pwconv", 1, 1, c_in, c, stride,
-                    h * stride, w * stride))
+                    in_h, in_w))
             c_in = c
     layers.append(ConvLayerSpec("fc", "fc", 1, 1, c_in, 10, 1, 1, 1))
     return CNNConfig("resnet18-mini", tuple(layers), num_classes=10)

@@ -83,6 +83,13 @@ class PipelinePlan:
     def schedule_for(self, name: str) -> LayerSchedule:
         return self._schedule_index[name]
 
+    def schedules_for(self, names: Sequence[str]
+                      ) -> Tuple[LayerSchedule, ...]:
+        """Member schedules of a fused unit (e.g. a residual block bound
+        to one block engine), in the given order — the granularity the
+        compiler costs and the block engines execute."""
+        return tuple(self._schedule_index[n] for n in names)
+
     @property
     def streamed(self) -> Tuple[LayerSchedule, ...]:
         return tuple(s for s in self.schedules if s.streamed)

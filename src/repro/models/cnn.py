@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.cnn import CNNConfig, ConvLayerSpec
+from repro.configs.cnn import (CNNConfig, ConvLayerSpec, ResBlockSpec,
+                               residual_blocks)
 from repro.kernels.quant import requant_epilogue
 from repro.models.layers import maybe_axis, MODEL_AXIS
 
@@ -99,16 +100,27 @@ def _is_residual_add(cfg: CNNConfig, idx: int) -> bool:
 EngineHook = Callable[[ConvLayerSpec, Params, jnp.ndarray, bool],
                       Optional[Tuple[jnp.ndarray, Optional[jnp.ndarray]]]]
 
+# block_engine(block, params, x) -> Optional[y_q].  The block-granular
+# dispatch hook: a whole residual block (conv chain + downsample + add +
+# relu) offered as ONE unit, for pipelines that bound it to a fused block
+# engine (res_block_int8).  Returning None falls back to per-layer
+# execution below.
+BlockEngineHook = Callable[[ResBlockSpec, Params, jnp.ndarray],
+                           Optional[jnp.ndarray]]
+
 
 def cnn_forward(params: Params, cfg: CNNConfig, images,
-                engine: Optional[EngineHook] = None) -> jnp.ndarray:
+                engine: Optional[EngineHook] = None,
+                block_engine: Optional[BlockEngineHook] = None
+                ) -> jnp.ndarray:
     """Plain feed-forward execution (the functional reference; the pipeline
     executor in runtime/pipeline.py runs the same layers through the Pallas
-    engines by passing ``engine``).
+    engines by passing ``engine``/``block_engine``).
 
     images: [B,224,224,3] (or reduced) int8.  Returns logits [B,classes].
-    Residual/downsample wiring for ResNets is reconstructed from the layer
-    names emitted by the config builders (``s{i}b{j}c{k}`` / ``...ds``).
+    Residual/downsample wiring for ResNets comes from
+    ``configs.cnn.residual_blocks`` — the same grouping the compiler's
+    block binding uses, so the topology and the bindings cannot drift.
 
     ``engine``: per-layer dispatch hook.  When provided, each conv/fc layer
     is offered to the hook first (the pipeline executor routes it to its
@@ -116,6 +128,10 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
     including the grouped depthwise engine); layers the hook declines
     (returns None for — e.g. layers unknown to the plan) run the jnp path,
     so topology wiring lives in exactly one place.
+
+    ``block_engine``: block-granular hook, offered each residual block
+    BEFORE its layers run individually; declining falls back to the
+    per-layer wiring here (which itself offers each layer to ``engine``).
     """
 
     def apply_layer(spec: ConvLayerSpec, x, relu: bool = True):
@@ -127,9 +143,8 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
 
     x = images
     layers = list(cfg.layers)
+    blocks = {b.convs[0].name: b for b in residual_blocks(cfg)}
     i = 0
-    skip: Optional[jnp.ndarray] = None
-    block_in: Optional[jnp.ndarray] = None
     while i < len(layers):
         spec = layers[i]
         name = spec.name
@@ -142,27 +157,25 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
                     (1, 3, 3, 1), (1, 2, 2, 1), "SAME").astype(jnp.int8)
             i += 1
             continue
-        if cfg.name.startswith("resnet") and name[0] == "s" and "b" in name:
-            # collect the block: convs then optional downsample
-            block = [spec]
-            j = i + 1
-            prefix = name[:name.index("c")] if "c" in name else name[:-2]
-            while j < len(layers) and layers[j].name.startswith(prefix):
-                block.append(layers[j])
-                j += 1
-            ds = [b for b in block if b.name.endswith("ds")]
-            convs = [b for b in block if not b.name.endswith("ds")]
+        if name in blocks:
+            blk = blocks[name]
+            if block_engine is not None:
+                out = block_engine(blk, params, x)
+                if out is not None:
+                    x = out
+                    i += len(blk.members)
+                    continue
             identity = x
             h = x
-            for ci, cspec in enumerate(convs):
-                last = ci == len(convs) - 1
+            for ci, cspec in enumerate(blk.convs):
+                last = ci == len(blk.convs) - 1
                 h, _ = apply_layer(cspec, h, relu=not last)
-            if ds:
-                identity, _ = apply_layer(ds[0], identity, relu=False)
+            if blk.ds is not None:
+                identity, _ = apply_layer(blk.ds, identity, relu=False)
             y = h.astype(jnp.int32) + identity.astype(jnp.int32)
             x = jnp.clip(y, -127, 127).astype(jnp.int8)
             x = jnp.where(x > 0, x, 0)                      # relu on int8
-            i = j
+            i += len(blk.members)
             continue
         if name.startswith("fc") or name in ("head0", "head1", "head"):
             if x.ndim == 4 and x.shape[1] > spec.k_h:

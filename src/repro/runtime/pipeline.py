@@ -1,25 +1,46 @@
 """Layer-pipelined CNN inference executor — the running H2PIPE system.
 
-``repro.compiler.compile(cfg, target)`` decides, per layer, which
-registered :class:`~repro.compiler.engines.LayerEngine` runs it and
-whether its weight buffer lives on chip or streams from HBM; this module
-*executes* a CNN under that :class:`CompiledPipeline`.  Dispatch is
-table-driven: the executor looks up each layer's compile-time engine
-binding and calls it with a per-run :class:`EngineContext` — there is no
-if/elif kernel selection here and no shared mutable state, so one
-executor (or one compiled pipeline) can serve concurrent requests.
+``repro.compiler.compile(cfg, target)`` decides, per layer (or per fused
+residual block), which registered
+:class:`~repro.compiler.engines.LayerEngine` runs it and whether its
+weight buffer lives on chip or streams from HBM; this module *executes*
+a CNN under that :class:`CompiledPipeline`, through one of two backends:
+
+``backend="fused"`` (default)
+    The stage-6 path: the whole engine table is closed over
+    ``models.cnn.cnn_forward`` and compiled into ONE ``jax.jit`` program
+    per (input shape, dtype) — a warm ``run()`` is a single XLA
+    dispatch, the software analogue of the paper's point that the whole
+    network IS one pipelined circuit.  Traces are cached on the
+    ``CompiledPipeline`` (shared across executors and threads); the
+    input buffer is donated on real backends.  Stats come from the
+    trace: engines return shape-static :class:`LayerExecStats` instead
+    of mutating a context, so the single trace yields the exact
+    template every warm run's :class:`ExecutionReport` replays.
+
+``backend="eager"``
+    The per-layer walk: each engine dispatched from Python, one jit
+    boundary per engine call.  Bit-identical to the fused path (golden
+    test) and handy for debugging a single engine; this is what every
+    ``run()`` was before the fused path existed.
 
 Topology wiring (residual adds, maxpool, global-average-pool) stays in
-``models.cnn.cnn_forward``; the executor plugs in as its ``engine`` hook,
-so the pipelined execution is the SAME network the functional reference
-runs — outputs are bit-identical.
+``models.cnn.cnn_forward``; both backends plug in as its
+``engine``/``block_engine`` hooks, so the pipelined execution is the
+SAME network the functional reference runs — outputs are bit-identical.
 
 The report cross-checks three views of the weight path that the paper
 keeps consistent by construction:
-  * executed:   streamed words counted at engine dispatch (Eq. 2 traffic);
+  * executed:   streamed words from the traced dispatch counters
+                (Eq. 2 traffic);
   * analytic:   the plan's ``weight_words_per_image`` (Eq. 2 formula);
   * simulated:  ``fifo_sim`` credit-mode delivery + tail-stall prediction
                 over the same per-row word demands (§V-A).
+
+Re-entrancy: per-run state is confined to the run's own
+:class:`ExecutionReport`; the engine context is frozen and engines are
+stateless, so concurrent ``run()``\\ s on one executor (or one compiled
+pipeline) cannot corrupt each other's accounting.
 """
 from __future__ import annotations
 
@@ -27,10 +48,9 @@ from typing import Any, Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
-from repro.compiler.engines import EngineContext, LayerExecStats, get_engine
+from repro.compiler.engines import EngineContext, LayerExecStats
 from repro.compiler.pipeline import (CompiledPipeline, ExecutionReport,
-                                     finalize)
-from repro.configs.cnn import ConvLayerSpec
+                                     finalize, make_dispatchers)
 from repro.core.schedule import PipelinePlan
 from repro.kernels.pallas_compat import resolve_interpret
 from repro.models.cnn import cnn_forward, init_cnn_params
@@ -39,6 +59,8 @@ __all__ = ["PipelineExecutor", "ExecutionReport", "LayerExecStats",
            "execute_cnn"]
 
 Params = Dict[str, Any]
+
+BACKENDS = ("fused", "eager")
 
 
 class PipelineExecutor:
@@ -50,21 +72,26 @@ class PipelineExecutor:
     ``build_pipeline_plan`` output) is accepted and gets engines bound on
     the fly, without target budget enforcement.
 
-    Re-entrancy: ``run`` threads all per-execution state (the report,
-    the interpret flag, the activation scale) through an
-    :class:`EngineContext` created per call — concurrent ``run``\\ s on
-    one executor cannot corrupt each other's accounting.
+    ``backend`` picks the execution strategy: ``"fused"`` (one jitted
+    XLA program per input shape, cached on the compiled pipeline) or
+    ``"eager"`` (the per-layer dispatch walk) — bit-identical by
+    contract.
     """
 
     def __init__(self, compiled: Union[CompiledPipeline, PipelinePlan], *,
-                 interpret: Optional[bool] = None, act_scale: float = 0.05):
+                 interpret: Optional[bool] = None, act_scale: float = 0.05,
+                 backend: str = "fused"):
         if isinstance(compiled, PipelinePlan):
             compiled = finalize(compiled, target=None)
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"expected one of {BACKENDS}")
         self.compiled = compiled
         if interpret is None and compiled.target is not None:
             interpret = compiled.target.interpret
         self.interpret = resolve_interpret(interpret)
         self.act_scale = act_scale
+        self.backend = backend
 
     @property
     def plan(self) -> PipelinePlan:
@@ -81,17 +108,20 @@ class PipelineExecutor:
             ) -> Tuple[jnp.ndarray, ExecutionReport]:
         """images: [B,H,W,C] int8 -> (logits [B,classes], report)."""
         report = ExecutionReport(plan=self.plan, images=int(images.shape[0]))
+        if self.backend == "fused":
+            trace = self.compiled.fused_trace(
+                params, images, interpret=self.interpret,
+                act_scale=self.act_scale)
+            logits = trace.fn(params, images)
+            report.layers.extend(trace.stats)      # post-hoc aggregation
+            return logits, report
+
         ctx = EngineContext(interpret=self.interpret,
-                            act_scale=self.act_scale, stats=report.layers)
-
-        def dispatch(spec: ConvLayerSpec, p: Params, x, relu: bool):
-            asn = self.compiled.assignment_for(spec.name)
-            if asn is None:
-                return None               # layer unknown to the plan
-            sched = self.plan.schedule_for(spec.name)
-            return get_engine(asn.engine).run(ctx, sched, p, x, relu)
-
-        logits = cnn_forward(params, self.plan.cfg, images, engine=dispatch)
+                            act_scale=self.act_scale)
+        dispatch, block_dispatch = make_dispatchers(
+            self.compiled, ctx, report.layers)
+        logits = cnn_forward(params, self.plan.cfg, images, engine=dispatch,
+                             block_engine=block_dispatch)
         return logits, report
 
     def __call__(self, params: Params, images) -> jnp.ndarray:
@@ -99,7 +129,9 @@ class PipelineExecutor:
 
 
 def execute_cnn(plan: Union[CompiledPipeline, PipelinePlan], params: Params,
-                images, *, interpret: Optional[bool] = None
+                images, *, interpret: Optional[bool] = None,
+                backend: str = "fused"
                 ) -> Tuple[jnp.ndarray, ExecutionReport]:
     """One-shot convenience: run ``images`` through ``plan``."""
-    return PipelineExecutor(plan, interpret=interpret).run(params, images)
+    return PipelineExecutor(plan, interpret=interpret,
+                            backend=backend).run(params, images)

@@ -61,12 +61,53 @@ def test_engine_table_covers_every_layer():
     table = cp.engine_table()
     assert set(table) == {l.name for l in MINI.layers}
     assert table["fc"] == "stream_matmul"
-    assert all(v == "conv2d_int8" for k, v in table.items() if k != "fc")
+    assert table["stem"] == "conv2d_int8"
+    # every residual-block member is bound at BLOCK granularity (the
+    # fused res_block_int8 unit); everything else stays per-layer
+    in_blocks = {m for b in cp.block_assignments for m in b.members}
+    assert in_blocks == set(table) - {"stem", "fc"}
+    assert all(table[name] == "res_block_int8" for name in in_blocks)
     # vmem report covers the same layers, all within budget
     report = cp.vmem_report()
     assert set(report) == set(table)
     assert all(0 < v <= TPU_INTERPRET.vmem_bytes for v in report.values())
     assert "engine" in cp.describe() and "stream_matmul" in cp.describe()
+
+
+def test_block_units_bound_and_costed():
+    """Stage 4 groups each residual block into one schedulable unit: the
+    block table covers exactly the s{i}b{j} groups, each unit's VMEM
+    cost is the sum of its members plus the identity buffer, and its
+    Eq. 2 words are the streamed members' plan analytics."""
+    from repro.configs.cnn import residual_blocks
+    cp = compiler.compile(MINI, TPU_INTERPRET)
+    blocks = {b.name: b for b in residual_blocks(MINI)}
+    assert set(cp.block_table()) == set(blocks)
+    eng = compiler.get_engine("conv2d_int8")
+    for ba in cp.block_assignments:
+        blk = blocks[ba.block]
+        assert ba.members == tuple(m.name for m in blk.members)
+        scheds = cp.plan.schedules_for(ba.members)
+        member_sum = sum(eng.vmem_bytes(s.spec, s) for s in scheds)
+        first = blk.convs[0]
+        assert ba.vmem_bytes == member_sum + first.in_h * first.in_w \
+            * first.c_in
+        assert ba.vmem_bytes <= TPU_INTERPRET.vmem_bytes
+        assert ba.hbm_words_per_image == sum(
+            s.weight_words_per_image for s in scheds if s.streamed)
+    # block_for resolves by block name and by member name
+    ba = cp.block_for("s1b0")
+    assert ba is not None and cp.block_for("s1b0c1") is ba
+    assert cp.block_for("stem") is None
+
+
+def test_block_unit_over_vmem_falls_back_to_per_layer():
+    """A block whose summed working set exceeds the target's VMEM budget
+    is NOT bound as a unit — its layers keep their per-layer bindings
+    (and per-layer validation still governs them)."""
+    cp = compiler.compile(MINI, REPLACE_TARGET)
+    assert cp.block_assignments == ()
+    assert "res_block_int8" not in cp.engine_table().values()
 
 
 def test_dwconv_layers_bind_to_registered_engine():

@@ -1,0 +1,83 @@
+"""The burst-aggregated credit-mode fifo_sim is the per-word reference.
+
+``fifo_sim.simulate(cfg, "credit")`` runs on counters + an exact
+periodic fast-forward; ``fifo_sim.simulate_reference`` is the original
+one-deque-entry-per-word event loop.  The fast path must be
+cycle-for-cycle identical — not just same verdict: same completion,
+same cycle count, same tail stalls, same delivered words per layer —
+across topologies, skews, latencies and word demands large enough to
+engage the fast-forward.
+"""
+import itertools
+
+import pytest
+
+from repro.core import fifo_sim
+
+
+def _outcomes_equal(a, b):
+    return (a.completed, a.deadlocked, a.cycles, a.outputs, a.stall_cycles,
+            list(a.per_layer_weight_words)) == \
+           (b.completed, b.deadlocked, b.cycles, b.outputs, b.stall_cycles,
+            list(b.per_layer_weight_words))
+
+
+@pytest.mark.parametrize("L,burst,lat", [
+    (1, 2, 1), (2, 4, 6), (3, 8, 30), (4, 4, 12),
+])
+@pytest.mark.parametrize("w0", [1, 7, 40, 600])
+def test_fast_credit_sim_matches_reference(L, burst, lat, w0):
+    """Cycle-exact equivalence over a topology/demand grid, including
+    demands big enough (w0=600 >> bm depth) that the periodic
+    fast-forward genuinely fires."""
+    wpa = tuple([w0] + [max(1, w0 // 3)] * (L - 1))
+    cfg = fifo_sim.SimConfig(
+        n_layers=L, burst=burst, bm_fifo_depth=2 * burst,
+        act_fifo_depth=2, dcfifo_depth=2 * burst, hbm_latency=lat,
+        weights_per_act=wpa, outputs_needed=6)
+    skew = [5 * i for i in range(L)]
+    fast = fifo_sim.simulate(cfg, "credit", start_skew=skew)
+    ref = fifo_sim.simulate_reference(cfg, "credit", start_skew=skew)
+    assert _outcomes_equal(fast, ref)
+    assert fast.completed and not fast.deadlocked
+
+
+def test_fast_credit_sim_matches_reference_dense_grid():
+    """A denser sweep of small configs (no skew) — every combination
+    must be cycle-identical to the per-word loop."""
+    for burst, bm, act, lat, w in itertools.product(
+            (2, 8), (8, 16), (1, 2), (1, 24), (1, 5, 90)):
+        cfg = fifo_sim.SimConfig(
+            n_layers=3, burst=burst, bm_fifo_depth=bm, act_fifo_depth=act,
+            dcfifo_depth=16, hbm_latency=lat,
+            weights_per_act=(w, max(1, w // 2), w), outputs_needed=5)
+        fast = fifo_sim.simulate(cfg, "credit")
+        ref = fifo_sim.simulate_reference(cfg, "credit")
+        assert _outcomes_equal(fast, ref), (burst, bm, act, lat, w)
+
+
+def test_fig5_demo_unchanged():
+    """The paper's Fig. 5 result survives the fast path: ready/valid
+    deadlocks (per-word reference loop — HoL needs word tags), credit
+    mode completes (fast path)."""
+    out = fifo_sim.demo()
+    assert out["ready_valid"].deadlocked
+    assert out["credit"].completed and not out["credit"].deadlocked
+    cfg = fifo_sim.fig5_scenario()
+    skew = [0, 40, 80]
+    ref = fifo_sim.simulate_reference(cfg, "credit", start_skew=skew)
+    assert _outcomes_equal(out["credit"], ref)
+
+
+def test_cycle_cap_scales_with_word_demand():
+    """word_scale=1 full-net streams need ~10^7 cycles at the
+    latency-bound delivery rate — the cap must scale with demand (and
+    respect an explicit override)."""
+    small = fifo_sim.SimConfig()
+    assert fifo_sim._cycle_cap(small) == 500_000
+    big = fifo_sim.SimConfig(weights_per_act=(200_000, 100_000),
+                             n_layers=2, outputs_needed=2,
+                             bm_fifo_depth=16, hbm_latency=168)
+    assert fifo_sim._cycle_cap(big) > 10_000_000
+    forced = fifo_sim.SimConfig(cycle_cap=1234)
+    assert fifo_sim._cycle_cap(forced) == 1234

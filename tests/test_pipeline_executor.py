@@ -138,6 +138,30 @@ def test_fifo_sim_exact_mode_matches_scaled_verdict():
     assert (exact.stall_cycles > 0) == (scaled.stall_cycles > 0)
 
 
+def test_fifo_sim_exact_mode_full_resnet18():
+    """fifo_sim fidelity at FULL scale: the complete ResNet-18 Eq. 2
+    word streams (word_scale=1 — up to ~236k words per activation, no
+    downscaling) simulate exactly on the burst-aggregated credit path,
+    reaching the same completion/stall verdict as the auto-scaled fast
+    path.  This is the run the per-word reference loop cannot finish in
+    CI time (~10^7 simulated cycles)."""
+    from repro.configs import CNN_CONFIGS
+    target = compiler.NX2100.replace(bram_m20ks=3000)   # forces streaming
+    cp = compiler.compile(CNN_CONFIGS["resnet18"], target)
+    assert len(cp.streamed_names) >= 3
+    wpr = [s.weight_words_per_row for s in cp.plan.streamed]
+    assert max(wpr) > 100_000                     # genuinely full streams
+    exact = cp.predict_stalls(outputs_needed=2, word_scale=1)
+    scaled = cp.predict_stalls(outputs_needed=2)
+    _, auto_scale = cp.plan.sim_config(outputs_needed=2)
+    assert auto_scale > 1                         # the fast path DID scale
+    assert exact.completed and scaled.completed
+    assert not exact.deadlocked and not scaled.deadlocked
+    assert (exact.stall_cycles > 0) == (scaled.stall_cycles > 0)
+    # every layer consumed its full exact demand: wpr * 2 activations
+    assert exact.per_layer_weight_words == [w * 2 for w in wpr]
+
+
 def test_executor_runs_full_family_reduced():
     """The compiled pipeline handles the paper's other topologies (reduced
     scale) — including MobileNet, whose depthwise layers now run through
