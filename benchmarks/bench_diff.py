@@ -1,16 +1,27 @@
-"""Benchmark regression gate: diff two BENCH_pipeline.json artifacts.
+"""Benchmark regression gate: diff two benchmark JSON artifacts.
 
-Compares the *modelled* numbers — deterministic compiler outputs, not
-wall-clock — between a previous run's artifact and the current one, row
-by row (matched on ``name``):
+Works over both artifact families (``BENCH_pipeline.json`` from
+pipeline_throughput.py and ``BENCH_serving.json`` from
+serving_throughput.py): rows are matched on ``name`` and only the gated
+metrics *present in a row* are compared, so one gate serves both.
 
-  * ``model_images_per_s``   may not DROP by more than the threshold;
-  * ``hbm_words_per_image``  may not GROW by more than the threshold.
+  * ``model_images_per_s``     may not DROP by more than the threshold
+                               (deterministic §VI model output);
+  * ``hbm_words_per_image``    may not GROW by more than the threshold
+                               (deterministic Eq. 2 accounting — on both
+                               pipeline and serving rows);
+  * ``serving_images_per_s``   may not DROP by more than the threshold
+                               (closed-loop serving throughput);
+  * ``serving_speedup_x``      may not DROP by more than the threshold
+                               (serving vs sequential ratio — both sides
+                               measured back to back on the same
+                               machine, so host noise largely cancels;
+                               the noise-robust half of the serving
+                               gate).
 
-Wall-clock fields are reported for context but never gate: CI machines
-are too noisy for a hard fail, while the modelled throughput and Eq. 2
-traffic only change when the planner/compiler changes — exactly the
-regressions this gate exists to catch.
+The pipeline wall-clock fields stay ungated (CI noise), and the serving
+throughput gate accepts some flake risk by design: a real >5% serving
+regression is exactly what this file exists to catch.
 
   python benchmarks/bench_diff.py PREV.json NEW.json [--threshold 0.05]
 
@@ -25,10 +36,13 @@ import sys
 from typing import Dict, List, Tuple
 
 # metric -> direction: "down" fails when the value shrinks, "up" when it
-# grows.  Only modelled (deterministic) numbers belong here.
+# grows.  Rows lacking a metric are skipped, so pipeline and serving
+# artifacts share this table.
 GATED_METRICS = {
     "model_images_per_s": "down",
     "hbm_words_per_image": "up",
+    "serving_images_per_s": "down",
+    "serving_speedup_x": "down",
 }
 
 

@@ -13,7 +13,9 @@ all weights pinned vs the Algorithm 1 hybrid plan — and reports, per plan:
     overhead is exactly what the fused path removes;
   * the §VI analytic throughput model over the same plan;
   * streamed weight traffic (Eq. 2 words) from the traced dispatch
-    counters;
+    counters — including the block-granular total for fused
+    ``res_block_int8`` units, cross-checked (hard fail) against the
+    plan-side ``BlockAssignment.hbm_words_per_image``;
   * tail-engine stall cycles predicted by the §V-A credit-mode fifo_sim
     over the plan's per-row word demands, against the sim's delivered
     word counts.
@@ -112,6 +114,17 @@ def bench(batch: int = 2, repeats: int = 7) -> List[Dict]:
             "hbm_words_streamed": report.total_hbm_words,
             "hbm_words_per_image": report.total_hbm_words // batch,
         }
+        # block-granular Eq. 2 cross-check: executed words of every fused
+        # res_block_int8 unit must match its plan-side BlockAssignment
+        block_rows = report.block_rows()
+        mismatched = [r["block"] for r in block_rows
+                      if r["hbm_words_per_image"]
+                      != r["plan_hbm_words_per_image"]]
+        if mismatched:
+            raise AssertionError(
+                f"block Eq. 2 mismatch (executed != plan): {mismatched}")
+        row["block_hbm_words_per_image"] = sum(
+            r["hbm_words_per_image"] for r in block_rows)
         if cp.streamed_names:
             sim_cfg, scale = cp.plan.sim_config(outputs_needed=8)
             sim = fifo_sim.simulate(sim_cfg, "credit")

@@ -242,6 +242,17 @@ class CompiledPipeline:
         return self.executor(interpret=interpret,
                              backend=backend).run(params, images)
 
+    def serve(self, params, *, microbatch: int = 8, credits: int = 4,
+              **kw):
+        """Continuous-streaming serving over this pipeline: a
+        :class:`~repro.runtime.cnn_serving.CnnServingEngine` packing
+        mixed-size requests into ``microbatch``-shaped fused dispatches,
+        at most ``credits`` microbatches in flight (§V-A).  Use as a
+        context manager, or call ``.start()``."""
+        from repro.runtime.cnn_serving import CnnServingEngine
+        return CnnServingEngine(self, params, microbatch=microbatch,
+                                credits=credits, **kw)
+
     # -- stage 6: the fused whole-pipeline trace ----------------------------
     # _fused_cache: (shape, dtype, interpret, act_scale) -> FusedTrace,
     # created in __post_init__ so it lives with the pipeline and every
@@ -276,11 +287,16 @@ class CompiledPipeline:
 @dataclass
 class ExecutionReport:
     """What one execution did, cross-checked three ways (executed Eq. 2
-    words at dispatch, the plan's analytic words, the §V-A fifo_sim)."""
+    words at dispatch, the plan's analytic words, the §V-A fifo_sim).
+    ``block_assignments`` carries the compile-time fused-block units so
+    Eq. 2 traffic is reportable at block granularity too (fused
+    ``res_block_int8`` units as first-class rows, not just their member
+    layers)."""
 
     plan: PipelinePlan
     images: int = 0
     layers: list = dataclasses.field(default_factory=list)  # LayerExecStats
+    block_assignments: Tuple["BlockAssignment", ...] = ()
 
     @property
     def hbm_weight_words(self) -> Dict[str, int]:
@@ -303,6 +319,32 @@ class ExecutionReport:
         """layer -> engine that actually ran (must equal the compile-time
         engine_table for layers the pipeline dispatched)."""
         return {st.name: st.kernel for st in self.layers}
+
+    def block_rows(self) -> List[Dict[str, Any]]:
+        """Block-granular Eq. 2 rows: one per fused block unit, with the
+        EXECUTED streamed words of its members (from the dispatch
+        counters) against the plan-side ``hbm_words_per_image`` the
+        :class:`BlockAssignment` claims — the same executed-vs-analytic
+        cross-check the per-layer report makes, at engine granularity."""
+        executed = self.hbm_weight_words
+        rows: List[Dict[str, Any]] = []
+        for b in self.block_assignments:
+            words = sum(executed.get(m, 0) for m in b.members)
+            rows.append({
+                "block": b.block,
+                "engine": b.engine,
+                "members": list(b.members),
+                "hbm_words": words,
+                "hbm_words_per_image": words // self.images
+                if self.images else 0,
+                "plan_hbm_words_per_image": b.hbm_words_per_image,
+            })
+        return rows
+
+    @property
+    def hbm_block_words(self) -> Dict[str, int]:
+        """Executed streamed words per fused block unit, whole batch."""
+        return {r["block"]: r["hbm_words"] for r in self.block_rows()}
 
     def fifo_prediction(self, outputs_needed: int = 32,
                         word_scale: Optional[int] = None

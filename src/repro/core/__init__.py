@@ -1,6 +1,10 @@
-# The paper's planning passes (placement, FIFO sizing, fifo_sim) and the
-# schedule data model live here; the staged compile() API that fuses them
-# and binds layer engines lives in ``repro.compiler``.
+# The paper's planning passes (placement, FIFO sizing, fifo_sim), the
+# schedule data model, and the §V-A credit-admission law live here; the
+# staged compile() API that fuses them and binds layer engines lives in
+# ``repro.compiler``.
 # ``build_pipeline_plan`` is a deprecation shim over that compiler.
+from repro.core.admission import (AdmissionController,  # noqa: F401
+                                  AdmissionError, AdmissionTrace,
+                                  replay_schedule)
 from repro.core.schedule import (HBM, PINNED, LayerSchedule,  # noqa: F401
                                  PipelinePlan, build_pipeline_plan)

@@ -1,0 +1,242 @@
+"""Credit-based admission control — the §V-A flow-control law as a value.
+
+H2PIPE never runs one image at a time: the accelerator admits a new
+image every initiation interval, with the number in flight bounded by
+FIFO credits so no stage can be overrun and no head-of-line blocking is
+possible (§V-A; the static schedule in ``core/dataflow.py`` is the same
+law compiled into a ``lax.scan``).  Two runtimes need that law at
+serving time — the LM batch engine in ``runtime/serving.py`` and the
+CNN streaming engine in ``runtime/cnn_serving.py`` — so the slot/credit
+bookkeeping they share lives here, once:
+
+:class:`AdmissionController`
+    The thread-safe runtime object: ``capacity`` credits, blocking /
+    non-blocking ``acquire``, ``release`` on completion, and invariant
+    hooks (``max_in_flight_seen``, admitted/completed totals,
+    :meth:`check_invariants`) that stress tests assert against — the
+    observable proof that producers never exceed the credit bound.
+
+:func:`replay_schedule`
+    The same controller driven on a discrete clock: at most one
+    admission per tick when a credit is free, completion (and credit
+    return) ``latency_ticks`` after admission, completions processed
+    after the tick's admission — exactly the cycle ordering of
+    ``fifo_sim``'s credit-mode prefetcher (issue before consume within
+    a cycle).  The property tests replay this against
+    ``fifo_sim.simulate(..., "credit")`` on the single-engine law
+    topology and against ``core.dataflow.pipeline_stats`` — the runtime
+    admission law and the cycle model provably agree.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class AdmissionError(RuntimeError):
+    """A credit-accounting invariant was violated (over-release, or a
+    closed controller still holding in-flight work)."""
+
+
+class AdmissionController:
+    """Bounded in-flight admission: ``capacity`` credits, one per unit of
+    in-flight work (a decode slot, a dispatched microbatch).
+
+    Thread-safe and observable: concurrent producers block in
+    :meth:`acquire` until a credit frees; completions :meth:`release`.
+    ``max_in_flight_seen`` records the high-water mark so tests can
+    assert the credit bound held over an entire concurrent run, not just
+    at sample points.
+    """
+
+    def __init__(self, capacity: int, *, name: str = "admission"):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.name = name
+        self.capacity = capacity
+        self._cv = threading.Condition()
+        self._free = capacity
+        self._closed = False
+        self.max_in_flight_seen = 0
+        self.admitted_total = 0
+        self.completed_total = 0
+
+    # -- credit operations ---------------------------------------------------
+
+    @property
+    def free_credits(self) -> int:
+        with self._cv:
+            return self._free
+
+    @property
+    def in_flight(self) -> int:
+        with self._cv:
+            return self.capacity - self._free
+
+    def try_acquire(self) -> bool:
+        """Take a credit if one is free; never blocks."""
+        with self._cv:
+            if self._closed or self._free == 0:
+                return False
+            self._take_locked()
+            return True
+
+    def acquire(self, timeout: Optional[float] = None) -> bool:
+        """Block until a credit frees (or ``timeout`` elapses / the
+        controller closes).  Returns whether a credit was taken."""
+        with self._cv:
+            if not self._cv.wait_for(
+                    lambda: self._free > 0 or self._closed, timeout):
+                return False
+            if self._closed:
+                return False
+            self._take_locked()
+            return True
+
+    def release(self, n: int = 1) -> None:
+        """Return ``n`` credits (one completed unit each)."""
+        with self._cv:
+            if n < 0 or self._free + n > self.capacity:
+                raise AdmissionError(
+                    f"{self.name}: release({n}) with {self._free}/"
+                    f"{self.capacity} credits free — more completions "
+                    f"than admissions")
+            self._free += n
+            self.completed_total += n
+            self._cv.notify_all()
+
+    @contextmanager
+    def slot(self, timeout: Optional[float] = None):
+        """``with controller.slot(): ...`` — acquire/release bracket."""
+        if not self.acquire(timeout):
+            raise AdmissionError(f"{self.name}: no credit within {timeout}s")
+        try:
+            yield
+        finally:
+            self.release()
+
+    @property
+    def closed(self) -> bool:
+        with self._cv:
+            return self._closed
+
+    def close(self) -> None:
+        """Wake all blocked acquirers; subsequent acquires fail."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    def _take_locked(self) -> None:
+        self._free -= 1
+        self.admitted_total += 1
+        inflight = self.capacity - self._free
+        if inflight > self.max_in_flight_seen:
+            self.max_in_flight_seen = inflight
+
+    # -- invariant hooks -----------------------------------------------------
+
+    def check_invariants(self) -> None:
+        """Raise :class:`AdmissionError` unless every credit law held:
+        0 <= free <= capacity, high-water mark within capacity, and
+        conservation (admitted - completed == in flight)."""
+        with self._cv:
+            free = self._free
+            if not 0 <= free <= self.capacity:
+                raise AdmissionError(
+                    f"{self.name}: {free} free credits outside "
+                    f"[0, {self.capacity}]")
+            if self.max_in_flight_seen > self.capacity:
+                raise AdmissionError(
+                    f"{self.name}: {self.max_in_flight_seen} in flight "
+                    f"exceeded capacity {self.capacity}")
+            if self.admitted_total - self.completed_total \
+                    != self.capacity - free:
+                raise AdmissionError(
+                    f"{self.name}: admitted {self.admitted_total} - "
+                    f"completed {self.completed_total} != "
+                    f"{self.capacity - free} in flight")
+
+    def assert_quiescent(self) -> None:
+        """All admitted work completed and every credit returned."""
+        self.check_invariants()
+        with self._cv:
+            if self._free != self.capacity:
+                raise AdmissionError(
+                    f"{self.name}: {self.capacity - self._free} unit(s) "
+                    f"still in flight at shutdown")
+
+
+# ---------------------------------------------------------------------------
+# the admission law on a discrete clock
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AdmissionTrace:
+    """What the tick-law replay did: per-item admission/completion ticks
+    plus the aggregates the cycle model predicts."""
+
+    capacity: int
+    latency_ticks: int
+    admit_ticks: List[int] = field(default_factory=list)
+    complete_ticks: List[int] = field(default_factory=list)
+    makespan: int = 0                 # tick the last item completed
+    max_in_flight: int = 0
+    idle_ticks: int = 0               # ticks with no completion (= stalls)
+
+
+def replay_schedule(n_items: int, *, capacity: int,
+                    latency_ticks: int,
+                    controller: Optional[AdmissionController] = None
+                    ) -> AdmissionTrace:
+    """Drive an :class:`AdmissionController` through the static admission
+    schedule: one admission per tick when a credit is free; the item
+    admitted at tick ``a`` completes (returning its credit) at tick
+    ``a + latency_ticks``, processed *after* that tick's admission —
+    fifo_sim's credit-mode cycle ordering (prefetcher issue precedes
+    engine consume within a cycle), and ``core/dataflow.py``'s schedule
+    when ``latency_ticks = n_stages - 1`` (microbatch ``m`` admitted at
+    tick ``m`` leaves the pipe at tick ``m + S - 1``: makespan
+    ``M + S - 1``, ``pipeline_stats``'s tick count).
+
+    Passing a ``controller`` verifies that *instance*'s bookkeeping tick
+    for tick; by default a fresh one of ``capacity`` credits is used.
+    The law is real code, not a closed form — the property tests equate
+    it with ``fifo_sim.simulate(..., "credit")`` on the single-engine
+    topology (makespan, stalls and the in-flight bound all match).
+    """
+    if latency_ticks < 0:
+        raise ValueError("latency_ticks must be >= 0")
+    ctl = controller if controller is not None \
+        else AdmissionController(capacity, name="replay")
+    if ctl.capacity != capacity:
+        raise ValueError(f"controller capacity {ctl.capacity} != {capacity}")
+    if ctl.closed or ctl.free_credits < capacity:
+        raise ValueError(
+            f"controller must be open and idle to replay the schedule "
+            f"(closed={ctl.closed}, {ctl.free_credits}/{capacity} free)")
+    trace = AdmissionTrace(capacity=capacity, latency_ticks=latency_ticks)
+    inflight: dict = {}               # completion tick -> count
+    pending = n_items
+    tick = 0
+    while len(trace.complete_ticks) < n_items:
+        tick += 1
+        if pending and ctl.try_acquire():
+            pending -= 1
+            trace.admit_ticks.append(tick)
+            done_at = tick + latency_ticks
+            inflight[done_at] = inflight.get(done_at, 0) + 1
+        trace.max_in_flight = max(trace.max_in_flight, ctl.in_flight)
+        done = inflight.pop(tick, 0)
+        if done:
+            ctl.release(done)
+            trace.complete_ticks.extend([tick] * done)
+        else:
+            trace.idle_ticks += 1
+        ctl.check_invariants()
+    trace.makespan = tick
+    if controller is None:
+        ctl.assert_quiescent()
+    return trace

@@ -1,0 +1,524 @@
+"""Continuous-streaming CNN serving — H2PIPE's §V runtime, not one-shot.
+
+The paper's accelerator never runs one image at a time: all layers
+process concurrently on a continuous image stream, a new image admitted
+every initiation interval, the number in flight bounded by FIFO credits
+(§V-A).  ``PipelineExecutor.run()`` is the one-shot analogue; this
+module is the *serving* analogue, built on the two PR-3 prerequisites
+(executor re-entrancy, the per-shape fused-trace cache):
+
+:class:`CnnServingEngine`
+    Owns a :class:`~repro.compiler.pipeline.CompiledPipeline`, a bounded
+    request queue, and two worker threads.  Requests of mixed image
+    counts are *packed* into one fixed microbatch shape (pad + mask) so
+    the per-shape fused-trace cache stays at a single warm entry, and
+    dispatch is asynchronously double-buffered: the dispatcher enqueues
+    microbatch ``t+1`` while ``t``'s device computation is in flight,
+    calling ``block_until_ready`` only at result delivery — warm serving
+    throughput is back-to-back single-dispatch XLA programs, the §V-A
+    credit bound (:class:`~repro.core.admission.AdmissionController`,
+    at most ``credits`` microbatches in flight) standing between the
+    dispatcher and the device queue exactly where the paper's
+    burst-matching FIFO credits stand between prefetcher and HBM.
+
+:class:`ServingReport`
+    What a serving interval did: throughput (images/s), p50/p95/p99
+    request latency, queue depth over time, microbatch occupancy, and
+    per-request Eq. 2 HBM words (useful words per request, plus the
+    executed total including padding — the padding overhead is visible,
+    never silently folded in).
+
+Results are bit-identical to sequential ``run()`` per request: packing
+only concatenates images along the batch dimension, every engine is
+per-image, and padded rows are sliced away before delivery (contract
+tested in tests/test_cnn_serving.py, including under concurrent
+producers).
+"""
+from __future__ import annotations
+
+import math
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.admission import AdmissionController, AdmissionError
+from repro.kernels.pallas_compat import resolve_interpret
+from repro.models.cnn import cnn_input_shape
+
+__all__ = ["CnnRequest", "CnnServingEngine", "ServingReport"]
+
+_STOP = object()                      # request-queue shutdown sentinel
+
+# a long-lived server must not grow without bound: per-request metrics
+# keep the most recent window (percentiles/rows are over this window;
+# the throughput counters are exact lifetime totals)
+METRIC_WINDOW = 16384
+REQUEST_ROW_WINDOW = 1024
+
+
+class CnnRequest:
+    """One submitted inference request: ``n`` images in, ``n`` logits
+    rows out.  Rows may span microbatches; the result is visible only
+    once every row has been delivered."""
+
+    def __init__(self, rid: int, images: np.ndarray):
+        self.rid = rid
+        self.images = images
+        self.n = int(images.shape[0])
+        self.t_submit = time.perf_counter()
+        self.t_done: Optional[float] = None
+        self.hbm_words = 0            # useful Eq. 2 words (n * words/image)
+        self._logits: Optional[np.ndarray] = None
+        self._remaining = self.n
+        self._error: Optional[BaseException] = None
+        self._event = threading.Event()
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def latency_s(self) -> float:
+        if self.t_done is None:
+            raise RuntimeError(f"request {self.rid} not complete")
+        return self.t_done - self.t_submit
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block until delivered; returns logits [n, classes]."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not done in {timeout}s")
+        if self._error is not None:
+            raise RuntimeError(
+                f"request {self.rid} failed in the serving engine"
+            ) from self._error
+        return self._logits
+
+    # called only from the completer thread (single consumer)
+    def _deliver(self, row_offset: int, rows: np.ndarray, now: float) -> bool:
+        if self._logits is None:
+            self._logits = np.empty((self.n,) + rows.shape[1:], rows.dtype)
+        self._logits[row_offset:row_offset + len(rows)] = rows
+        self._remaining -= len(rows)
+        if self._remaining == 0:
+            self.t_done = now
+            self._event.set()
+            return True
+        return False
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self._event.set()
+
+
+@dataclass
+class ServingReport:
+    """Aggregate view of one serving interval (see module docstring)."""
+
+    requests: int
+    images: int
+    microbatches: int
+    microbatch_size: int
+    padded_rows: int
+    credits: int
+    max_in_flight: int
+    wall_s: float
+    images_per_s: float
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    hbm_words_per_image: int
+    hbm_words_useful: int             # sum over requests of n * words/image
+    hbm_words_executed: int           # traced words incl. padded rows
+    queue_depth: List[Tuple[float, int]] = field(default_factory=list)
+    request_rows: List[Dict[str, Any]] = field(default_factory=list)
+
+    @property
+    def pad_fraction(self) -> float:
+        total = self.microbatches * self.microbatch_size
+        return self.padded_rows / total if total else 0.0
+
+    def table(self) -> str:
+        """Human-readable summary + per-request rows."""
+        head = [
+            f"requests={self.requests}  images={self.images}  "
+            f"microbatches={self.microbatches}x{self.microbatch_size} "
+            f"(pad {self.pad_fraction:.0%})  "
+            f"in-flight<= {self.max_in_flight}/{self.credits}",
+            f"throughput={self.images_per_s:.1f} images/s  "
+            f"latency p50={self.p50_ms:.1f}ms p95={self.p95_ms:.1f}ms "
+            f"p99={self.p99_ms:.1f}ms",
+            f"Eq.2 words/image={self.hbm_words_per_image}  "
+            f"useful={self.hbm_words_useful}  "
+            f"executed={self.hbm_words_executed} (incl. padding)",
+        ]
+        hdr = f"{'rid':>5s} {'images':>6s} {'latency_ms':>10s} " \
+              f"{'hbm_words':>10s}"
+        rows = [hdr, "-" * len(hdr)]
+        for r in self.request_rows:
+            rows.append(f"{r['rid']:>5d} {r['images']:>6d} "
+                        f"{r['latency_ms']:>10.2f} {r['hbm_words']:>10d}")
+        return "\n".join(head + rows)
+
+
+class CnnServingEngine:
+    """Credit-bounded, double-buffered serving over one compiled pipeline.
+
+    ``credits`` is the §V-A in-flight bound: at most that many
+    microbatches between dispatch and delivery (the runtime mirror of
+    ``core/dataflow.py``'s at-most-``n_stages``-in-flight static
+    schedule — ``pipeline_stats(S, M)["in_flight_credits"] == S``).
+    ``microbatch`` is the one packed shape every dispatch uses, so the
+    fused-trace cache holds exactly one warm entry however mixed the
+    request sizes are.
+
+    Use as a context manager (``with cp.serve(params) as eng``) or call
+    :meth:`start`/:meth:`stop` explicitly; :meth:`submit` is thread-safe
+    (N producers may submit concurrently — the admission invariants are
+    asserted under exactly that in the stress test).
+    """
+
+    def __init__(self, compiled, params, *, microbatch: int = 8,
+                 credits: int = 4, queue_depth: int = 64,
+                 interpret: Optional[bool] = None, act_scale: float = 0.05):
+        if microbatch <= 0:
+            raise ValueError("microbatch must be positive")
+        self.compiled = compiled
+        self.params = params
+        self.microbatch = microbatch
+        self.act_scale = act_scale
+        if interpret is None and compiled.target is not None:
+            interpret = compiled.target.interpret
+        self.interpret = resolve_interpret(interpret)
+        self.admission = AdmissionController(credits, name="cnn-serving")
+        self._queue: "queue.Queue" = queue.Queue(maxsize=queue_depth)
+        self._inflight: "queue.Queue" = queue.Queue()
+        self._in_shape = cnn_input_shape(compiled.plan.cfg, microbatch)
+        #: analytic Eq. 2 words per image (plan-side; start() cross-checks
+        #: the fused trace's executed counters against it)
+        self.words_per_image = sum(
+            compiled.plan.hbm_words_per_image().values())
+        self._trace = None
+        self._cursor: Optional[List[Any]] = None     # [request, row_offset]
+        self._saw_stop = False
+        self._threads: List[threading.Thread] = []
+        self._started = False
+        self._stopped = False
+        self._error: Optional[BaseException] = None
+
+        self._lock = threading.Condition()
+        # serializes submissions against shutdown: stop() flips
+        # _accepting and enqueues the sentinel under this lock, so no
+        # submit() can land a request behind the sentinel unseen
+        self._submit_lock = threading.Lock()
+        self._accepting = False
+        self._rid = 0
+        self._outstanding = 0
+        self._latencies: deque = deque(maxlen=METRIC_WINDOW)
+        self._request_rows: deque = deque(maxlen=REQUEST_ROW_WINDOW)
+        self._images_done = 0
+        self._requests_done = 0
+        self._mb_count = 0
+        self._padded_rows = 0
+        self._depth_samples: deque = deque(maxlen=METRIC_WINDOW)
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "CnnServingEngine":
+        if self._started:
+            return self
+        if self._stopped:
+            raise RuntimeError(
+                "serving engine is single-use; create a new one "
+                "(CompiledPipeline.serve) instead of restarting")
+        # warm the ONE fused trace every microbatch reuses (and read the
+        # per-image Eq. 2 words off its stats template)
+        zeros = jnp.zeros(self._in_shape, jnp.int8)
+        self._trace = self.compiled.fused_trace(
+            self.params, zeros, interpret=self.interpret,
+            act_scale=self.act_scale)
+        traced = sum(st.hbm_words for st in self._trace.stats)
+        if traced != self.words_per_image * self.microbatch:
+            raise RuntimeError(
+                f"traced Eq. 2 words ({traced}) disagree with the plan "
+                f"({self.words_per_image} words/image x {self.microbatch})")
+        self._threads = [
+            threading.Thread(target=self._dispatch_loop, daemon=True,
+                             name="cnn-serving-dispatch"),
+            threading.Thread(target=self._complete_loop, daemon=True,
+                             name="cnn-serving-complete"),
+        ]
+        for t in self._threads:
+            t.start()
+        self._started = True
+        self._accepting = True
+        return self
+
+    def stop(self) -> None:
+        """Drain everything already submitted, then shut the workers
+        down and verify the admission accounting is quiescent.  The
+        engine is single-use: a stopped engine cannot be restarted."""
+        if not self._started:
+            return
+        # under the submit lock: once _accepting flips, no submit() can
+        # enqueue, and everything enqueued earlier sits BEFORE the
+        # sentinel — the dispatcher drains it all, nothing is orphaned
+        with self._submit_lock:
+            self._accepting = False
+            self._queue.put(_STOP)
+        for t in self._threads:
+            t.join()
+        self._started = False
+        self._stopped = True
+        if self._error is None:
+            self.admission.assert_quiescent()
+
+    def __enter__(self) -> "CnnServingEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, images) -> CnnRequest:
+        """Enqueue ``images`` ([n,H,W,C] int8, any n >= 1); returns the
+        request handle.  Blocks when the bounded queue is full (the
+        outer backpressure tier above the microbatch credits)."""
+        if not self._started:
+            raise RuntimeError("serving engine not started")
+        if self._error is not None:
+            raise RuntimeError("serving engine failed") from self._error
+        arr = np.asarray(images)
+        if arr.ndim == 3:
+            arr = arr[None]
+        want = self._in_shape[1:]
+        if arr.ndim != 4 or arr.shape[1:] != want or arr.shape[0] < 1:
+            raise ValueError(
+                f"expected images [n,{want[0]},{want[1]},{want[2]}], "
+                f"got {arr.shape}")
+        arr = arr.astype(np.int8, copy=False)
+        with self._lock:
+            self._rid += 1
+            req = CnnRequest(self._rid, arr)
+            req.hbm_words = req.n * self.words_per_image
+            self._outstanding += 1
+            if self._t0 is None:
+                self._t0 = req.t_submit
+        # check-and-enqueue is atomic against stop()'s sentinel, so a
+        # racing shutdown either rejects this request or dispatches it —
+        # it can never strand it behind the sentinel.  The put is
+        # bounded (never parked forever on a full queue whose workers
+        # died), and an engine failure racing past the check is caught
+        # by the post-put sweep — the request fails, it does not hang.
+        with self._submit_lock:
+            while True:
+                if not self._accepting:
+                    self._reject(req)
+                    raise RuntimeError("serving engine is stopping")
+                try:
+                    self._queue.put(req, timeout=0.5)
+                    break
+                except queue.Full:
+                    continue
+        if self._error is not None:
+            self._sweep_queues(self._error)
+        return req
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted request has been delivered."""
+        with self._lock:
+            if not self._lock.wait_for(
+                    lambda: self._outstanding == 0 or self._error is not None,
+                    timeout):
+                raise TimeoutError(
+                    f"{self._outstanding} request(s) still outstanding")
+        if self._error is not None:
+            raise RuntimeError("serving engine failed") from self._error
+
+    def serve(self, batches: Sequence[Any]
+              ) -> Tuple[List[np.ndarray], ServingReport]:
+        """Closed-loop convenience: submit all ``batches``, drain, and
+        return ([logits per batch], report)."""
+        reqs = [self.submit(b) for b in batches]
+        self.drain()
+        return [r.result() for r in reqs], self.report()
+
+    # -- reporting -----------------------------------------------------------
+
+    def report(self) -> ServingReport:
+        with self._lock:
+            lat = sorted(self._latencies)       # most recent METRIC_WINDOW
+            n_req = self._requests_done         # exact lifetime counter
+            wall = (self._t_last - self._t0) \
+                if (self._t0 is not None and self._t_last is not None) else 0.0
+            mb = self._mb_count
+            images = self._images_done
+
+            def pct(p: float) -> float:
+                if not lat:
+                    return 0.0
+                # nearest-rank: ceil(p*n)-th smallest (1-indexed)
+                return 1e3 * lat[max(0, math.ceil(p * len(lat)) - 1)]
+
+            return ServingReport(
+                requests=n_req,
+                images=images,
+                microbatches=mb,
+                microbatch_size=self.microbatch,
+                padded_rows=self._padded_rows,
+                credits=self.admission.capacity,
+                max_in_flight=self.admission.max_in_flight_seen,
+                wall_s=wall,
+                images_per_s=images / wall if wall > 0 else 0.0,
+                p50_ms=pct(0.50), p95_ms=pct(0.95), p99_ms=pct(0.99),
+                hbm_words_per_image=self.words_per_image,
+                hbm_words_useful=images * self.words_per_image,
+                hbm_words_executed=mb * self.microbatch
+                * self.words_per_image,
+                queue_depth=list(self._depth_samples),
+                request_rows=list(self._request_rows),
+            )
+
+    # -- worker threads ------------------------------------------------------
+
+    def _dispatch_loop(self) -> None:
+        try:
+            while True:
+                pack = self._collect_pack()
+                if pack is None:
+                    break
+                self._dispatch(*pack)
+        except BaseException as exc:                 # pragma: no cover
+            self._fail(exc)
+        finally:
+            self._inflight.put(None)                 # completer sentinel
+
+    def _collect_pack(self):
+        """Pack queued request rows into one microbatch: fill greedily
+        from whatever is immediately available, but never wait for more
+        once at least one row is held (latency over occupancy — the
+        mask/padding makes partial batches exact, just less dense)."""
+        rows: List[Tuple[CnnRequest, int, int, int]] = []
+        filled = 0
+        while filled < self.microbatch:
+            if self._cursor is None:
+                if self._saw_stop:
+                    break
+                try:
+                    item = self._queue.get(block=filled == 0)
+                except queue.Empty:
+                    break
+                if item is _STOP:
+                    self._saw_stop = True
+                    break
+                self._cursor = [item, 0]
+            req, off = self._cursor
+            take = min(req.n - off, self.microbatch - filled)
+            rows.append((req, off, filled, take))
+            filled += take
+            self._cursor = [req, off + take] if off + take < req.n else None
+        if filled == 0:
+            return None                              # stopped and empty
+        return rows, filled
+
+    def _dispatch(self, rows, filled: int) -> None:
+        buf = np.zeros(self._in_shape, np.int8)      # padded fixed shape
+        for req, roff, moff, take in rows:
+            buf[moff:moff + take] = req.images[roff:roff + take]
+        # the §V-A credit: at most ``credits`` microbatches between here
+        # and delivery — blocks the dispatcher, never the device
+        if not self.admission.acquire():
+            raise AdmissionError("admission controller closed mid-serve")
+        logits = self._trace.fn(self.params, jnp.asarray(buf))
+        t = time.perf_counter()
+        with self._lock:
+            self._mb_count += 1
+            self._padded_rows += self.microbatch - filled
+            depth = self._queue.qsize() + (1 if self._cursor else 0)
+            self._depth_samples.append(
+                (t - self._t0 if self._t0 else 0.0, depth))
+        self._inflight.put((logits, rows))
+
+    def _complete_loop(self) -> None:
+        try:
+            while True:
+                item = self._inflight.get()
+                if item is None:
+                    break
+                logits, rows = item
+                arr = np.asarray(jax.block_until_ready(logits))
+                self.admission.release()             # credit back on arrival
+                now = time.perf_counter()
+                finished: List[CnnRequest] = []
+                for req, roff, moff, take in rows:
+                    if req._deliver(roff, arr[moff:moff + take], now):
+                        finished.append(req)
+                if finished:
+                    with self._lock:
+                        for req in finished:
+                            self._latencies.append(req.latency_s)
+                            self._images_done += req.n
+                            self._requests_done += 1
+                            self._request_rows.append({
+                                "rid": req.rid, "images": req.n,
+                                "latency_ms": 1e3 * req.latency_s,
+                                "hbm_words": req.hbm_words,
+                            })
+                        self._t_last = now
+                        self._outstanding -= len(finished)
+                        self._lock.notify_all()
+        except BaseException as exc:                 # pragma: no cover
+            self._fail(exc)
+
+    def _reject(self, req: CnnRequest) -> None:
+        """Back out a request that was counted but never enqueued."""
+        with self._lock:
+            self._outstanding -= 1
+            self._lock.notify_all()
+
+    def _fail(self, exc: BaseException) -> None:
+        """Fail every queued and in-flight request, wake all waiters."""
+        self._accepting = False        # flag only: no _submit_lock here (a
+        # producer may hold it blocked in put() with no dispatcher left)
+        with self._lock:
+            if self._error is None:
+                self._error = exc
+            self._lock.notify_all()
+        self.admission.close()
+        self._sweep_queues(exc)
+        if self._cursor is not None:
+            self._cursor[0]._fail(exc)
+            self._cursor = None
+
+    def _sweep_queues(self, exc: BaseException) -> None:
+        """Fail everything sitting in the queues.  Safe to call from any
+        thread, repeatedly: each item is retrieved exactly once (also run
+        from submit() after a failure races its enqueue, so no request
+        can land post-sweep and hang)."""
+        for q in (self._queue, self._inflight):
+            while True:
+                try:
+                    item = q.get_nowait()
+                except queue.Empty:
+                    break
+                if isinstance(item, CnnRequest):
+                    item._fail(exc)
+                elif isinstance(item, tuple):
+                    for req, *_ in item[1]:
+                        req._fail(exc)
+                else:
+                    # a shutdown sentinel (_STOP / completer None): a
+                    # parked worker still needs it to exit — put it back
+                    # and stop sweeping (nothing can land behind a
+                    # sentinel: submissions are lock-serialized)
+                    q.put(item)
+                    break

@@ -107,7 +107,9 @@ class PipelineExecutor:
     def run(self, params: Params, images
             ) -> Tuple[jnp.ndarray, ExecutionReport]:
         """images: [B,H,W,C] int8 -> (logits [B,classes], report)."""
-        report = ExecutionReport(plan=self.plan, images=int(images.shape[0]))
+        report = ExecutionReport(plan=self.plan, images=int(images.shape[0]),
+                                 block_assignments=self.compiled
+                                 .block_assignments)
         if self.backend == "fused":
             trace = self.compiled.fused_trace(
                 params, images, interpret=self.interpret,

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.admission import AdmissionController
 from repro.models import transformer as tmod
 
 
@@ -46,18 +47,24 @@ class ServingEngine:
         self.arch = arch
         self.slots = batch_slots
         self.max_seq = max_seq
-        self.credits = batch_slots           # free slots (§V-A credits)
+        # free decode slots ARE §V-A credits; the bookkeeping is the
+        # shared controller both serving runtimes use (core/admission.py)
+        self.admission = AdmissionController(batch_slots, name="lm-serving")
         self.active: Dict[int, Request] = {}
         self._decode = jax.jit(
             lambda p, c, t, pos: tmod.decode_step(p, arch, c, t, pos))
+
+    @property
+    def credits(self) -> int:
+        """Free slots (read-only view of the admission controller)."""
+        return self.admission.free_credits
 
     def admit(self, reqs: List[Request]) -> List[Request]:
         """Admit up to ``credits`` requests; returns those admitted."""
         taken = []
         for r in reqs:
-            if self.credits == 0:
+            if not self.admission.try_acquire():
                 break
-            self.credits -= 1
             taken.append(r)
         return taken
 
@@ -70,7 +77,8 @@ class ServingEngine:
             pending = pending[len(batch):]
             if batch:
                 finished.extend(self._serve_batch(batch))
-                self.credits += len(batch)
+                self.admission.release(len(batch))
+        self.admission.assert_quiescent()
         return finished
 
     def _serve_batch(self, batch: List[Request]) -> List[Request]:

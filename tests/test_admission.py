@@ -1,0 +1,173 @@
+"""The §V-A credit-admission law: runtime controller == cycle model.
+
+``core/admission.py`` is the slot/credit bookkeeping both serving
+runtimes share.  Its contract is proved three ways:
+
+  * **controller semantics** — acquire/release accounting, the blocking
+    path, and the invariant hooks stress tests rely on;
+  * **law == fifo_sim** — :func:`replay_schedule` (an actual
+    ``AdmissionController`` driven on a discrete clock) is
+    makespan-, stall- and bound-exact against
+    ``fifo_sim.simulate(..., "credit")`` on the single-engine law
+    topology (one layer, burst 1, one word per activation: credits =
+    burst-matching FIFO depth, admission = prefetcher issue, completion
+    = engine consume).  This is the property the ISSUE calls the
+    runtime/cycle-model agreement;
+  * **law == dataflow schedule** — with ``latency = n_stages - 1`` the
+    replay reproduces ``core.dataflow.pipeline_stats`` exactly: makespan
+    ``M + S - 1`` ticks, at most ``S`` (= ``in_flight_credits``) in
+    flight.
+"""
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fifo_sim
+from repro.core.admission import (AdmissionController, AdmissionError,
+                                  replay_schedule)
+from repro.core.dataflow import pipeline_stats
+
+
+# ---------------------------------------------------------------------------
+# controller semantics
+# ---------------------------------------------------------------------------
+
+
+def test_controller_basic_accounting():
+    c = AdmissionController(2)
+    assert c.free_credits == 2 and c.in_flight == 0
+    assert c.try_acquire() and c.try_acquire()
+    assert not c.try_acquire()                   # bound enforced
+    assert c.in_flight == 2 == c.max_in_flight_seen
+    c.release()
+    assert c.free_credits == 1
+    c.release()
+    c.assert_quiescent()
+    assert c.admitted_total == 2 == c.completed_total
+
+
+def test_over_release_raises():
+    c = AdmissionController(1)
+    with pytest.raises(AdmissionError, match="release"):
+        c.release()
+    assert c.try_acquire()
+    c.release(1)
+    with pytest.raises(AdmissionError):
+        c.release(1)
+
+
+def test_slot_context_manager():
+    c = AdmissionController(1)
+    with c.slot():
+        assert c.in_flight == 1
+        with pytest.raises(AdmissionError):      # second slot: no credit
+            with c.slot(timeout=0.01):
+                pass
+    c.assert_quiescent()
+
+
+def test_blocking_acquire_wakes_on_release():
+    c = AdmissionController(1)
+    assert c.acquire()
+    got = []
+    t = threading.Thread(target=lambda: got.append(c.acquire(timeout=5)))
+    t.start()
+    time.sleep(0.05)
+    assert not got                               # genuinely blocked
+    c.release()
+    t.join(timeout=5)
+    assert got == [True]
+    c.release()
+    c.assert_quiescent()
+
+
+def test_close_wakes_blocked_acquirers():
+    c = AdmissionController(1)
+    assert c.acquire()
+    got = []
+    t = threading.Thread(target=lambda: got.append(c.acquire()))
+    t.start()
+    time.sleep(0.05)
+    c.close()
+    t.join(timeout=5)
+    assert got == [False]
+    assert not c.try_acquire()                   # closed stays closed
+
+
+def test_invalid_capacity_rejected():
+    with pytest.raises(ValueError):
+        AdmissionController(0)
+
+
+# ---------------------------------------------------------------------------
+# the law vs the fifo_sim cycle model
+# ---------------------------------------------------------------------------
+
+
+def _law_sim(capacity: int, latency: int, n: int) -> fifo_sim.SimOutcome:
+    """fifo_sim's credit mode on the single-engine law topology: the
+    prefetcher's per-layer credits ARE the admission credits."""
+    return fifo_sim.simulate(fifo_sim.SimConfig(
+        n_layers=1, burst=1, bm_fifo_depth=capacity, act_fifo_depth=1,
+        dcfifo_depth=max(64, capacity), hbm_latency=latency,
+        weights_per_act=(1,), outputs_needed=n), "credit")
+
+
+@settings(max_examples=60, deadline=None)
+@given(capacity=st.integers(1, 8), latency=st.integers(1, 40),
+       n=st.integers(1, 50))
+def test_replay_matches_fifo_sim_credit_mode(capacity, latency, n):
+    """Runtime admission law == cycle model, exactly: same makespan,
+    same tail-stall count, and the in-flight high-water mark equals the
+    Little's-law bound min(credits, latency+1, n)."""
+    sim = _law_sim(capacity, latency, n)
+    trace = replay_schedule(n, capacity=capacity, latency_ticks=latency)
+    assert sim.completed and not sim.deadlocked
+    assert trace.makespan == sim.cycles
+    assert trace.idle_ticks == sim.stall_cycles
+    assert len(trace.admit_ticks) == n == len(trace.complete_ticks)
+    assert trace.max_in_flight == min(capacity, latency + 1, n)
+    # one admission per tick, never two
+    assert all(b > a for a, b in zip(trace.admit_ticks,
+                                     trace.admit_ticks[1:]))
+
+
+def test_replay_verifies_caller_controller():
+    """Passing a controller replays the law through THAT instance —
+    its counters afterwards show the whole schedule went through it."""
+    ctl = AdmissionController(3)
+    trace = replay_schedule(10, capacity=3, latency_ticks=5,
+                            controller=ctl)
+    assert ctl.admitted_total == ctl.completed_total == 10
+    assert ctl.max_in_flight_seen == trace.max_in_flight == 3
+    ctl.assert_quiescent()
+    with pytest.raises(ValueError, match="capacity"):
+        replay_schedule(1, capacity=2, latency_ticks=1, controller=ctl)
+    # a controller that can never admit must be rejected, not spun on
+    busy = AdmissionController(2)
+    assert busy.try_acquire()
+    with pytest.raises(ValueError, match="open and idle"):
+        replay_schedule(1, capacity=2, latency_ticks=1, controller=busy)
+    busy.release()
+    busy.close()
+    with pytest.raises(ValueError, match="open and idle"):
+        replay_schedule(1, capacity=2, latency_ticks=1, controller=busy)
+
+
+@settings(max_examples=30, deadline=None)
+@given(stages=st.integers(1, 6), microbatches=st.integers(1, 24))
+def test_replay_matches_dataflow_static_schedule(stages, microbatches):
+    """latency = S-1 ticks (a microbatch leaves the pipe S-1 ticks after
+    admission) reproduces core/dataflow.py's static schedule: makespan
+    M + S - 1 with at most S = in_flight_credits in flight."""
+    stats = pipeline_stats(stages, microbatches)
+    trace = replay_schedule(microbatches, capacity=stages,
+                            latency_ticks=stages - 1)
+    assert trace.makespan == stats["ticks"]
+    assert trace.max_in_flight <= stats["in_flight_credits"]
+    assert trace.max_in_flight == min(stages, microbatches)
+    # admissions are back to back: the static schedule never stalls the
+    # admission port when credits cover the pipeline depth
+    assert trace.admit_ticks == list(range(1, microbatches + 1))

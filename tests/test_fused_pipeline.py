@@ -120,6 +120,36 @@ def test_concurrent_runs_do_not_cross_reports(setup):
         assert bool(jnp.all(logits == ref2[:batch])), name
 
 
+def test_block_granular_eq2_rows(setup):
+    """Fused ``res_block_int8`` units are first-class in the traffic
+    cross-check: the report carries one Eq. 2 row per block unit, whose
+    executed streamed words equal the plan-side
+    ``BlockAssignment.hbm_words_per_image`` times the batch — on both
+    backends."""
+    cp, params, x = setup
+    batch = int(x.shape[0])
+    for backend in ("fused", "eager"):
+        _, rep = cp.run(params, x, backend=backend)
+        assert rep.block_assignments == cp.block_assignments
+        rows = rep.block_rows()
+        assert {r["block"] for r in rows} == set(cp.block_table())
+        for row in rows:
+            b = cp.block_for(row["block"])
+            assert row["engine"] == b.engine
+            assert row["members"] == list(b.members)
+            assert row["hbm_words"] == batch * b.hbm_words_per_image
+            assert row["hbm_words_per_image"] == b.hbm_words_per_image
+            assert row["plan_hbm_words_per_image"] == b.hbm_words_per_image
+        assert rep.hbm_block_words == {
+            b.block: batch * b.hbm_words_per_image
+            for b in cp.block_assignments}
+        # block words are a subset of (not additional to) the layer total
+        assert sum(rep.hbm_block_words.values()) <= rep.total_hbm_words
+    # at least one block genuinely streams on this plan, or the test
+    # proves nothing
+    assert any(b.hbm_words_per_image for b in cp.block_assignments)
+
+
 def test_unknown_backend_rejected(setup):
     cp, params, x = setup
     with pytest.raises(ValueError, match="backend"):

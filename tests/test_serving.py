@@ -29,7 +29,9 @@ def test_credit_bound(engine):
             for i in range(10)]
     taken = engine.admit(reqs)
     assert len(taken) == engine.slots        # never exceeds free credits
-    engine.credits += len(taken)             # return for other tests
+    assert engine.credits == 0
+    engine.admission.release(len(taken))     # return for other tests
+    engine.admission.assert_quiescent()
 
 
 def test_greedy_deterministic(engine):
