@@ -23,6 +23,14 @@ The pipeline wall-clock fields stay ungated (CI noise), and the serving
 throughput gate accepts some flake risk by design: a real >5% serving
 regression is exactly what this file exists to catch.
 
+Deliberate graph changes reset the baseline per row: pipeline rows carry
+``topology_nodes`` (the compiled node count), and a row whose node count
+differs from the previous artifact's is reported as a note and NOT
+gated — modelled images/s and Eq. 2 words of a *different* graph are not
+comparable (e.g. the topology-engine migration added pool/GAP nodes and
+legitimately moved one more ResNet-50 layer to HBM).  Rows without the
+field on both sides (serving artifacts) gate as before.
+
   python benchmarks/bench_diff.py PREV.json NEW.json [--threshold 0.05]
 
 Exit status 1 when any gated metric regresses past the threshold (or a
@@ -41,6 +49,8 @@ from typing import Dict, List, Tuple
 GATED_METRICS = {
     "model_images_per_s": "down",
     "hbm_words_per_image": "up",
+    "topology_words_per_image": "up",     # whole-graph Eq. 2 total (pool
+                                          # nodes included, 0 words each)
     "serving_images_per_s": "down",
     "serving_speedup_x": "down",
 }
@@ -60,6 +70,13 @@ def compare(prev: Dict, new: Dict, threshold: float
         nrow = new_rows.get(name)
         if nrow is None:
             regressions.append(f"{name}: row disappeared from the artifact")
+            continue
+        if prow.get("topology_nodes") != nrow.get("topology_nodes"):
+            notes.append(
+                f"{name}: graph changed "
+                f"({prow.get('topology_nodes')} -> "
+                f"{nrow.get('topology_nodes')} nodes); baseline reset, "
+                f"row not gated")
             continue
         for metric, direction in GATED_METRICS.items():
             if metric not in prow:

@@ -41,15 +41,26 @@ def fig3_hbm() -> List[Dict]:
 
 
 def table1_memory() -> List[Dict]:
+    """Table I over the FULL topology: pool/GAP nodes are first-class
+    graph nodes now, contributing activation line buffers (never
+    weights) to the memory breakdown; the Eq. 2 columns make the
+    zero-weight-traffic property of the topology nodes auditable."""
     rows = []
     for name, cfg in CNN_CONFIGS.items():
         w = cfg.total_weight_bits() / 1e6
         a = cfg.total_activation_bits() / 1e6
+        pools = [l for l in cfg.layers if l.is_pool]
         rows.append({
             "name": f"table1/{name}",
+            "topology_nodes": len(cfg.layers),
+            "pool_nodes": len(pools),
             "weight_Mb": round(w), "act_Mb": round(a),
             "act_frac_pct": round(100 * a / (a + w), 1),
             "fits_140Mb": (w + a) <= 140,
+            # Eq. 2 re-read traffic, whole graph vs its pool subset (the
+            # latter is 0 by construction: pooling engines are weightless)
+            "eq2_traffic_MB": round(cfg.total_weight_traffic() / 1e6, 1),
+            "pool_eq2_bytes": sum(l.weight_traffic_bytes() for l in pools),
         })
     return rows
 

@@ -13,9 +13,11 @@ all weights pinned vs the Algorithm 1 hybrid plan — and reports, per plan:
     overhead is exactly what the fused path removes;
   * the §VI analytic throughput model over the same plan;
   * streamed weight traffic (Eq. 2 words) from the traced dispatch
-    counters — including the block-granular total for fused
-    ``res_block_int8`` units, cross-checked (hard fail) against the
-    plan-side ``BlockAssignment.hbm_words_per_image``;
+    counters — cross-checked (hard fail, ``ExecutionReport.verify``)
+    against the plan analytics over 100% of the topology: every node
+    (pool/GAP included) dispatched, per-node and per-fused-block words
+    exact, plus the whole-graph ``topology_words_per_image`` total the
+    regression gate tracks;
   * tail-engine stall cycles predicted by the §V-A credit-mode fifo_sim
     over the plan's per-row word demands, against the sim's delivered
     word counts.
@@ -103,6 +105,8 @@ def bench(batch: int = 2, repeats: int = 7) -> List[Dict]:
         row = {
             "name": f"pipeline/{label}",
             "net": cfg.name,
+            "topology_nodes": len(cp.schedules),
+            "pool_nodes": sum(1 for s in cp.schedules if s.spec.is_pool),
             "streamed_layers": len(cp.streamed_names),
             "engines": sorted(set(cp.engine_table().values())),
             "fused_blocks": len(cp.block_assignments),
@@ -113,18 +117,18 @@ def bench(batch: int = 2, repeats: int = 7) -> List[Dict]:
             "model_images_per_s": round(cp.throughput()["images_per_s"], 1),
             "hbm_words_streamed": report.total_hbm_words,
             "hbm_words_per_image": report.total_hbm_words // batch,
+            # Eq. 2 words over the WHOLE topology (pool nodes included —
+            # 0 words each by construction, so this equals the streamed
+            # total; the gate catches any node ever starting to charge)
+            "topology_words_per_image": sum(
+                cp.hbm_words_per_image().values()),
         }
-        # block-granular Eq. 2 cross-check: executed words of every fused
-        # res_block_int8 unit must match its plan-side BlockAssignment
-        block_rows = report.block_rows()
-        mismatched = [r["block"] for r in block_rows
-                      if r["hbm_words_per_image"]
-                      != r["plan_hbm_words_per_image"]]
-        if mismatched:
-            raise AssertionError(
-                f"block Eq. 2 mismatch (executed != plan): {mismatched}")
+        # whole-net Eq. 2 cross-check, hard fail: every topology node
+        # dispatched, executed words == plan analytics per node AND per
+        # fused res_block_int8 unit (Eq2MismatchError on drift)
+        report.verify()
         row["block_hbm_words_per_image"] = sum(
-            r["hbm_words_per_image"] for r in block_rows)
+            r["hbm_words_per_image"] for r in report.block_rows())
         if cp.streamed_names:
             sim_cfg, scale = cp.plan.sim_config(outputs_needed=8)
             sim = fifo_sim.simulate(sim_cfg, "credit")
@@ -144,14 +148,23 @@ def modelled_rows() -> List[Dict]:
     rows = []
     for name in PAPER_NETS:
         cp = compiler.compile(CNN_CONFIGS[name], compiler.NX2100)
+        # execution-free whole-net Eq. 2 cross-check (hard fail): the
+        # shape-static stats the bound engines will report must equal
+        # the plan analytics for 100% of the topology
+        cp.eq2_report().verify()
         t = cp.throughput()
+        words = sum(cp.hbm_words_per_image().values())
         rows.append({
             "name": f"model/{name}",
             "net": name,
+            "topology_nodes": len(cp.schedules),
+            "pool_nodes": sum(1 for s in cp.schedules if s.spec.is_pool),
             "streamed_layers": len(cp.streamed_names),
+            "fused_blocks": len(cp.block_assignments),
             "model_images_per_s": round(t["images_per_s"], 1),
             "bottleneck": t["bottleneck"],
-            "hbm_words_per_image": sum(cp.hbm_words_per_image().values()),
+            "hbm_words_per_image": words,
+            "topology_words_per_image": words,
         })
     return rows
 

@@ -9,12 +9,15 @@ Public API:
     explicit device resource descriptors;
   * :func:`register_engine` / :class:`LayerEngine` — the pluggable
     per-layer kernel registry (conv2d_int8, dwconv_int8, stream_matmul,
-    res_block_int8, jnp_ref built in; ``is_block = True`` engines bind
-    whole residual blocks as one schedulable unit);
+    maxpool_int8, global_avgpool_int8, res_block_int8, jnp_ref built in;
+    ``is_block = True`` engines bind whole residual blocks — basic and
+    bottleneck — as one schedulable unit);
   * :class:`CompiledPipeline` — immutable result: ``engine_table()``,
     ``block_table()``, ``vmem_report()``, ``describe()``, ``run()``
     (``backend="fused"`` one-dispatch jit per input shape, cached;
-    ``backend="eager"`` per-layer walk).
+    ``backend="eager"`` per-layer walk), plus ``stats_template()`` /
+    ``eq2_report().verify()`` — the hard-fail plan-vs-dispatch Eq. 2
+    cross-check over 100% of the topology, execution-free.
 
 ``repro.core.build_pipeline_plan`` remains as a deprecation shim over
 ``plan_pipeline(cfg, NX2100.replace(**kwargs))`` — stages 1-3 only,
@@ -28,10 +31,11 @@ from repro.compiler.engines import (EngineContext, LayerEngine,  # noqa: F401
                                     unregister_engine)
 from repro.compiler.pipeline import (BlockAssignment,  # noqa: F401
                                      CompileError, CompiledPipeline,
-                                     EngineAssignment, ExecutionReport,
-                                     FusedTrace, TargetBudgetError, compile,
-                                     finalize, make_dispatchers,
-                                     plan_pipeline, trace_fused)
+                                     EngineAssignment, Eq2MismatchError,
+                                     ExecutionReport, FusedTrace,
+                                     TargetBudgetError, compile, finalize,
+                                     make_dispatchers, plan_pipeline,
+                                     trace_fused)
 from repro.compiler.target import (DEFAULT_VMEM_BYTES, NX2100,  # noqa: F401
                                    PRESETS, TPU_INTERPRET, Target,
                                    get_target)

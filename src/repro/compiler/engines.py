@@ -46,8 +46,17 @@ downsample, add and relu the way the paper places whole engines.
 
 Built-in engines: ``conv2d_int8`` (dense/pointwise conv + big fc-as-conv
 heads), ``dwconv_int8`` (grouped depthwise — the MobileNet path),
-``stream_matmul`` (1x1 fc heads), ``res_block_int8`` (fused residual
-blocks), ``jnp_ref`` (XLA reference, priority 0 safety net).
+``stream_matmul`` (1x1 fc heads), ``maxpool_int8`` / ``global_avgpool_int8``
+(the weightless pooling topology nodes — line-buffer comparators and
+channel accumulators, never streamed, zero Eq. 2 words), ``res_block_int8``
+(fused residual blocks — basic AND bottleneck), ``jnp_ref`` (XLA
+reference, priority 0 safety net).
+
+Every engine also exposes ``stats(sched, batch)`` — the shape-static
+:class:`LayerExecStats` a dispatch of that schedule WILL return, without
+executing anything.  ``CompiledPipeline.stats_template`` assembles these
+into the full-net Eq. 2 template the plan-vs-executed cross-check hard-
+fails against.
 """
 from __future__ import annotations
 
@@ -59,9 +68,10 @@ from typing import Any, Dict, List, Optional, Protocol, Tuple, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.configs.cnn import ConvLayerSpec, ResBlockSpec
+from repro.configs.cnn import POOL_KINDS, ConvLayerSpec, ResBlockSpec
 from repro.core.schedule import HBM, PINNED, LayerSchedule
 from repro.kernels.conv2d_int8.ops import conv2d_int8, same_padded_width
+from repro.kernels.pool_int8.ops import global_avgpool_int8, maxpool_int8
 from repro.kernels.quant import requant_epilogue
 from repro.kernels.stream_matmul import ops as sm_ops
 
@@ -169,6 +179,13 @@ class LayerEngine(Protocol):
 
     def vmem_bytes(self, spec: ConvLayerSpec, sched: LayerSchedule) -> int:
         """Working-set bytes one dispatch claims (batch-1 convention)."""
+        ...
+
+    def stats(self, sched: LayerSchedule, batch: int) -> LayerExecStats:
+        """The shape-static stats one dispatch of ``sched`` WILL return,
+        without executing — the template the plan-vs-executed Eq. 2
+        cross-check (``CompiledPipeline.stats_template``) is built from.
+        Must equal what ``run`` returns for the same schedule/batch."""
         ...
 
     def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
@@ -302,7 +319,7 @@ class Conv2DInt8Engine:
         # dense.  Widths use the kernel's SAME-pad ceil, not spec's floor.
         tap_in = 1 if self.depthwise else spec.c_in
         c_out = spec.c_in if self.depthwise else spec.c_out
-        out_w = -(-spec.in_w // spec.stride)
+        out_w = spec.out_w                  # SAME ceil, == kernel output
         line_buf = spec.k_h * _padded_width(spec) * spec.c_in      # int8
         if sched.streamed:
             w = min(sched.n_buffers, spec.k_h * spec.k_w) \
@@ -311,6 +328,14 @@ class Conv2DInt8Engine:
             w = spec.k_h * spec.k_w * tap_in * c_out               # pinned
         out_row = out_w * c_out * 4                                # int32
         return line_buf + w + 2 * out_row                          # + acc
+
+    def stats(self, sched: LayerSchedule, batch: int) -> LayerExecStats:
+        """The shape-static stats one dispatch returns: the kernel emits
+        ``spec.out_h`` SAME-padded output rows per image (out_h is the
+        ceil the kernels produce, so template == executed == plan)."""
+        return LayerExecStats.for_dispatch(sched, kernel=self.name,
+                                           batch=batch,
+                                           rows=sched.spec.out_h)
 
     def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
             x, relu: bool):
@@ -349,6 +374,11 @@ class StreamMatmulFCEngine:
             bn=_block(spec.c_out, self.BN),
             n_buffers=max(2, sched.n_buffers))
 
+    def stats(self, sched: LayerSchedule, batch: int) -> LayerExecStats:
+        """One matmul dispatch == one output 'row' of weight reads."""
+        return LayerExecStats.for_dispatch(sched, kernel=self.name,
+                                           batch=batch, rows=1)
+
     def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
             x, relu: bool):
         spec = sched.spec
@@ -371,6 +401,75 @@ class StreamMatmulFCEngine:
         return y_q, y_f, stats
 
 
+@register_engine("maxpool_int8", priority=10)
+class MaxPoolInt8Engine:
+    """The maxpool topology node as a first-class engine: a k_h-row line
+    buffer feeding comparator trees (``kernels/pool_int8``) — the paper
+    places a dedicated pooling engine per node exactly like a conv
+    engine, just with zero weight memory.  Never streams (there are no
+    weights to stream: ``can_stream = False``), Eq. 2 words are 0 by
+    construction, and the VMEM claim is the real line buffer + the
+    double-buffered output row."""
+
+    can_stream = False
+
+    def supports(self, spec: ConvLayerSpec) -> bool:
+        return spec.kind == "maxpool"
+
+    def vmem_bytes(self, spec: ConvLayerSpec, sched: LayerSchedule) -> int:
+        line_buf = spec.k_h * _padded_width(spec) * spec.c_in      # int8
+        out_row = spec.out_w * spec.c_in                           # int8
+        return line_buf + 2 * out_row
+
+    def stats(self, sched: LayerSchedule, batch: int) -> LayerExecStats:
+        return LayerExecStats.for_dispatch(sched, kernel=self.name,
+                                           batch=batch,
+                                           rows=sched.spec.out_h,
+                                           mode=PINNED)
+
+    def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
+            x, relu: bool):
+        spec = sched.spec
+        y = maxpool_int8(x, k=spec.k_h, stride=spec.stride,
+                         interpret=ctx.interpret)
+        stats = LayerExecStats.for_dispatch(
+            sched, kernel=self.name, batch=int(x.shape[0]),
+            rows=int(y.shape[1]), mode=PINNED)
+        return y, None, stats
+
+
+@register_engine("global_avgpool_int8", priority=10)
+class GlobalAvgPoolInt8Engine:
+    """The global-average-pool node as an engine: per-channel int32
+    accumulators + the activation requantizer (``kernels/pool_int8``).
+    Weightless like maxpool (``can_stream = False``, zero Eq. 2 words);
+    the VMEM claim is the resident spatial map the kernel reduces plus
+    the accumulator bank and the 1x1 output row."""
+
+    can_stream = False
+
+    def supports(self, spec: ConvLayerSpec) -> bool:
+        return spec.kind == "gap"
+
+    def vmem_bytes(self, spec: ConvLayerSpec, sched: LayerSchedule) -> int:
+        in_map = spec.in_h * spec.in_w * spec.c_in                 # int8
+        acc = spec.c_in * 4                                        # int32
+        return in_map + acc + 2 * spec.c_in
+
+    def stats(self, sched: LayerSchedule, batch: int) -> LayerExecStats:
+        return LayerExecStats.for_dispatch(sched, kernel=self.name,
+                                           batch=batch, rows=1, mode=PINNED)
+
+    def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
+            x, relu: bool):
+        y = global_avgpool_int8(x, act_scale=ctx.act_scale,
+                                interpret=ctx.interpret)
+        stats = LayerExecStats.for_dispatch(
+            sched, kernel=self.name, batch=int(x.shape[0]), rows=1,
+            mode=PINNED)
+        return y, None, stats
+
+
 @register_engine("jnp_ref", priority=0)
 class JnpReferenceEngine:
     """The XLA reference path as an explicit, lowest-priority engine: it
@@ -379,7 +478,9 @@ class JnpReferenceEngine:
     engine table SAYS so at compile time instead of a silent dispatch
     fallback.  Streams nothing (``can_stream = False``: stage 5 pins any
     placement that lands here), and accounting records the pinned tier
-    that actually ran."""
+    that actually ran.  Pool nodes route to the jnp pooling references
+    (same numerics the Pallas pool engines are differential-tested
+    against), everything else to ``conv_layer_forward``."""
 
     can_stream = False
 
@@ -389,13 +490,20 @@ class JnpReferenceEngine:
     def vmem_bytes(self, spec: ConvLayerSpec, sched: LayerSchedule) -> int:
         return 0
 
+    def stats(self, sched: LayerSchedule, batch: int) -> LayerExecStats:
+        return LayerExecStats.for_dispatch(sched, kernel=self.name,
+                                           batch=0, mode=PINNED)
+
     def run(self, ctx: EngineContext, sched: LayerSchedule, params: Params,
             x, relu: bool):
-        from repro.models.cnn import conv_layer_forward
-        y_q, y_f = conv_layer_forward(params, sched.spec, x,
-                                      act_scale=ctx.act_scale, relu=relu)
+        from repro.models.cnn import conv_layer_forward, pool_forward
+        spec = sched.spec
         stats = LayerExecStats.for_dispatch(sched, kernel=self.name,
                                             batch=0, mode=PINNED)
+        if spec.kind in POOL_KINDS:
+            return pool_forward(spec, x, act_scale=ctx.act_scale), None, stats
+        y_q, y_f = conv_layer_forward(params, spec, x,
+                                      act_scale=ctx.act_scale, relu=relu)
         return y_q, y_f, stats
 
 
@@ -411,8 +519,14 @@ class ResBlockInt8Engine:
 
     The block claims the SUM of its members' working sets plus the
     identity buffer (the skip path holds the block input while the conv
-    chain runs); ``compile()`` only binds the block when that total fits
-    the target's VMEM budget, else the layers keep per-layer bindings.
+    chain runs), plus the WIDEST intermediate activation map handed
+    between members — the chain is sequential inside the unit, so one
+    extra staging buffer sized by the widest producer covers every
+    member-to-member handoff.  This tightened large-block model is what
+    lets bottleneck (1x1-3x3-1x1 + downsample) blocks bind on real
+    targets instead of falling back per-layer early; ``compile()`` only
+    binds the block when the total fits the target's VMEM budget, else
+    the layers keep per-layer bindings.
     """
 
     is_block = True
@@ -436,7 +550,23 @@ class ResBlockInt8Engine:
         members = sum(
             eng.vmem_bytes(s.spec, s)
             for eng, s in zip(self._member_engines(block), scheds))
-        return members + identity
+        widest = max(m.out_h * m.out_w * m.c_out                 # int8 stage
+                     for m in block.members)
+        return members + identity + widest
+
+    def stats(self, block: ResBlockSpec, scheds: Tuple[LayerSchedule, ...],
+              batch: int) -> Tuple[LayerExecStats, ...]:
+        """Per-member stats template in dispatch order (convs then ds),
+        each reported under this block engine's name — exactly what one
+        ``run`` returns, without executing anything."""
+        by_name = {s.spec.name: s for s in scheds}
+        order = list(block.convs) + ([block.ds] if block.ds is not None
+                                     else [])
+        return tuple(
+            dataclasses.replace(
+                select_engine(m).stats(by_name[m.name], batch),
+                kernel=self.name)
+            for m in order)
 
     def run(self, ctx: EngineContext, block: ResBlockSpec,
             scheds: Tuple[LayerSchedule, ...], params: Params, x

@@ -13,14 +13,19 @@ an explicit pass over explicit values:
   3. **FIFO sizing**   last-stage + burst-matching depths from the measured
                        HBM latency/efficiency curves (§III/§IV-A), fused
                        into per-layer :class:`LayerSchedule`\\ s;
-  4. **engine select** every layer is bound to a registered
-                       :class:`~repro.compiler.engines.LayerEngine` —
+  4. **engine select** every graph node — convs, fc heads, AND the
+                       pooling topology nodes (maxpool / GAP) — is bound
+                       to a registered
+                       :class:`~repro.compiler.engines.LayerEngine`;
                        the binding is *visible* (``engine_table()``)
-                       before anything executes; residual blocks whose
+                       before anything executes, and covers 100% of the
+                       topology (no implicit wiring left in the model).
+                       Residual blocks — basic and bottleneck — whose
                        members all land on Pallas conv engines are
                        additionally bound as ONE schedulable unit to a
                        block engine (``res_block_int8``), with the
-                       unit's own VMEM cost and Eq. 2 words;
+                       unit's own (member sum + identity + widest
+                       intermediate) VMEM cost and Eq. 2 words;
   5. **validation**    each binding's ``vmem_bytes`` is checked against
                        ``target.vmem_bytes``.  A pinned layer that does
                        not fit is re-placed to the HBM tier when its
@@ -73,6 +78,14 @@ from repro.core.schedule import (HBM, PINNED, LayerSchedule, PipelinePlan)
 
 class CompileError(ValueError):
     """A stage of ``compile()`` rejected the (config, target) pair."""
+
+
+class Eq2MismatchError(RuntimeError):
+    """The hard-fail Eq. 2 cross-check tripped: a run's (or template's)
+    per-node streamed words disagree with the plan analytics, or a graph
+    node never dispatched.  Either means the compiled bindings and the
+    executed network have drifted — a correctness bug, never a tolerance
+    issue (the comparison is exact integers)."""
 
 
 class TargetBudgetError(CompileError):
@@ -242,6 +255,47 @@ class CompiledPipeline:
         return self.executor(interpret=interpret,
                              backend=backend).run(params, images)
 
+    # -- Eq. 2 template + hard-fail cross-check -----------------------------
+
+    def stats_template(self, batch: int = 1) -> Tuple[LayerExecStats, ...]:
+        """The shape-static :class:`LayerExecStats` sequence one run of
+        ``batch`` images WILL report, assembled from the bound engines'
+        ``stats`` accounting in dispatch order — no execution, no trace.
+        Block-owned layers report under their block engine's name, same
+        as the fused unit's ``run``.  Equality with an actual report's
+        ``layers`` is pinned by test for executable configs, which is
+        what lets the full-size nets be cross-checked without running
+        224x224 images through the interpreter."""
+        blocks = {b.name: b for b in residual_blocks(self.plan.cfg)}
+        out: List[LayerExecStats] = []
+        emitted = set()
+        for a, s in zip(self.assignments, self.plan.schedules):
+            if a.block is not None:
+                # fused unit: the block engine owns its members' stats
+                # accounting (ONE source — the same method its run
+                # mirrors); members are contiguous in config order, so
+                # emit the whole unit at its first member
+                if a.block in emitted:
+                    continue
+                emitted.add(a.block)
+                basn = self.block_for(a.block)
+                scheds = self.plan.schedules_for(basn.members)
+                out.extend(get_engine(basn.engine).stats(
+                    blocks[a.block], scheds, batch))
+            else:
+                out.append(get_engine(a.engine).stats(s, batch))
+        return tuple(out)
+
+    def eq2_report(self, batch: int = 1) -> "ExecutionReport":
+        """An :class:`ExecutionReport` built from ``stats_template`` —
+        what a run of ``batch`` images will report, without executing.
+        ``eq2_report().verify()`` is the whole-net plan-vs-dispatch
+        Eq. 2 cross-check at compile time."""
+        rep = ExecutionReport(plan=self.plan, images=batch,
+                              block_assignments=self.block_assignments)
+        rep.layers.extend(self.stats_template(batch))
+        return rep
+
     def serve(self, params, *, microbatch: int = 8, credits: int = 4,
               **kw):
         """Continuous-streaming serving over this pipeline: a
@@ -345,6 +399,41 @@ class ExecutionReport:
     def hbm_block_words(self) -> Dict[str, int]:
         """Executed streamed words per fused block unit, whole batch."""
         return {r["block"]: r["hbm_words"] for r in self.block_rows()}
+
+    def verify(self) -> "ExecutionReport":
+        """HARD-FAIL Eq. 2 cross-check over the whole topology: every
+        graph node dispatched exactly once per image, executed streamed
+        words equal to the plan's ``weight_words_per_image`` analytics
+        per node AND per fused block unit — exact integer equality,
+        raising :class:`Eq2MismatchError` on the first drift.  Returns
+        self so call sites can chain it."""
+        names = [s.spec.name for s in self.plan.schedules]
+        dispatched = {st.name for st in self.layers}
+        missing = [n for n in names if n not in dispatched]
+        if missing:
+            raise Eq2MismatchError(
+                f"{len(missing)} graph node(s) never dispatched: {missing}")
+        # only nonzero demands: a (caller-forced) streamed zero-word node
+        # never shows up in the HBM-mode dispatch counters, and zero
+        # words planned == zero words executed is agreement, not drift
+        expected = {n: w * self.images
+                    for n, w in self.plan.hbm_words_per_image().items()
+                    if w > 0}
+        got = self.hbm_weight_words
+        if got != expected:
+            drift = {n: (expected.get(n), got.get(n))
+                     for n in set(expected) | set(got)
+                     if expected.get(n) != got.get(n)}
+            raise Eq2MismatchError(
+                f"executed Eq. 2 words != plan analytics "
+                f"(plan, executed): {drift}")
+        for row in self.block_rows():
+            want = row["plan_hbm_words_per_image"] * self.images
+            if row["hbm_words"] != want:
+                raise Eq2MismatchError(
+                    f"block {row['block']}: executed {row['hbm_words']} "
+                    f"words != plan {want}")
+        return self
 
     def fifo_prediction(self, outputs_needed: int = 32,
                         word_scale: Optional[int] = None

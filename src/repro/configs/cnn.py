@@ -11,6 +11,14 @@ precision), with HPIPE conventions:
   * activations buffered on chip as a sliding window of ``k_h`` lines
     (+1 line being written) per layer input,
   * weights re-read once per output row when streamed from HBM (Eq. 2).
+
+Topology ops are first-class nodes: maxpool (``kind="maxpool"``) and
+global-average-pool (``kind="gap"``) layers appear in ``CNNConfig.layers``
+like every conv, so the compiler places, costs and binds 100% of the graph
+— the paper emits a hardware engine for every node, pooling included; no
+wiring hides inside the model's forward function.  Pool nodes carry zero
+weights (they never stream, Eq. 2 words are 0) but real activation
+buffers.
 """
 from __future__ import annotations
 
@@ -18,13 +26,17 @@ import dataclasses
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
+#: Weightless topology kinds: placed and costed like any engine, but with
+#: no weight memory, no Eq. 2 traffic, and no AI-TB parallelism to balance.
+POOL_KINDS = ("maxpool", "gap")
+
 
 @dataclass(frozen=True)
 class ConvLayerSpec:
-    """One convolutional (or fc-as-conv) layer as H2PIPE sees it."""
+    """One CNN graph node (conv, fc-as-conv, or pooling) as H2PIPE sees it."""
 
     name: str
-    kind: str                 # conv | dwconv | pwconv | fc
+    kind: str                 # conv | dwconv | pwconv | fc | maxpool | gap
     k_h: int
     k_w: int
     c_in: int
@@ -34,15 +46,25 @@ class ConvLayerSpec:
     in_w: int
 
     @property
+    def is_pool(self) -> bool:
+        return self.kind in POOL_KINDS
+
+    @property
     def out_h(self) -> int:
-        return max(1, self.in_h // self.stride)
+        """SAME-padded output rows: ceil(in_h / stride) — the row count
+        the kernels actually emit, so Eq. 2 analytics (words per image =
+        words per row x out_h) and executed dispatch counters agree for
+        every geometry, odd maps included."""
+        return -(-self.in_h // self.stride)
 
     @property
     def out_w(self) -> int:
-        return max(1, self.in_w // self.stride)
+        return -(-self.in_w // self.stride)
 
     @property
     def weight_count(self) -> int:
+        if self.is_pool:
+            return 0                  # comparators/accumulators, no weights
         if self.kind == "dwconv":
             return self.k_h * self.k_w * self.c_in
         return self.k_h * self.k_w * self.c_in * self.c_out
@@ -52,7 +74,10 @@ class ConvLayerSpec:
 
     @property
     def macs(self) -> int:
-        """Multiply-accumulates for one image."""
+        """Multiply-accumulates for one image (pool nodes do comparator /
+        accumulator work on the fabric, not MACs on the tensor blocks)."""
+        if self.is_pool:
+            return 0
         if self.kind == "dwconv":
             return self.k_h * self.k_w * self.c_in * self.out_h * self.out_w
         return (self.k_h * self.k_w * self.c_in * self.c_out
@@ -64,7 +89,11 @@ class ConvLayerSpec:
 
     def activation_window_bits(self, bits: int = 8) -> int:
         """On-chip activation line buffer: k_h input lines + 1 in flight,
-        double-buffered (HPIPE duplicates activation buffers for Fmax)."""
+        double-buffered (HPIPE duplicates activation buffers for Fmax).
+        A GAP node needs no line window — one input row in flight plus a
+        32-bit per-channel accumulator."""
+        if self.kind == "gap":
+            return (self.in_w * self.c_in * bits + self.c_in * 32) * 2
         lines = self.k_h + 1
         return self.in_w * self.c_in * lines * bits * 2
 
@@ -89,23 +118,37 @@ class CNNConfig:
 
     def reduced(self) -> "CNNConfig":
         """Tiny CIFAR-scale variant for smoke tests: keep the topology family,
-        shrink depth/channels."""
+        shrink depth/channels.  Pool nodes inside the kept prefix survive
+        (shapes recomputed); a GAP node is re-synthesized before the first
+        fc head when the map is still spatial, so the reduced graph — like
+        the full one — contains every topology op as an explicit node."""
         keep = [l for i, l in enumerate(self.layers) if i < 4 or l.kind == "fc"]
-        small = []
+        small: List[ConvLayerSpec] = []
         h, w = 32, 32
+        c_prev = 3
         for l in keep:
-            c_in = 3 if not small else small[-1].c_out
+            if l.kind == "gap":
+                continue              # re-synthesized before the fc head
+            if l.kind == "maxpool":
+                small.append(dataclasses.replace(
+                    l, c_in=c_prev, c_out=c_prev, in_h=h, in_w=w))
+                h, w = max(1, h // l.stride), max(1, w // l.stride)
+                continue
+            c_in = c_prev
             c_out = min(l.c_out, 16)
             if l.kind == "dwconv":
                 c_out = c_in
             stride = l.stride
             k_h, k_w = l.k_h, l.k_w
             if l.kind == "fc":          # fc-as-conv runs on the pooled 1x1 map
+                if h > 1 or w > 1:      # explicit GAP node feeds the head
+                    small.append(_gap(c_in, h, w))
                 k_h = k_w = stride = 1
                 h = w = 1
             small.append(dataclasses.replace(
                 l, c_in=c_in, c_out=c_out, in_h=h, in_w=w,
                 k_h=k_h, k_w=k_w, stride=stride))
+            c_prev = c_out
             h, w = max(1, h // stride), max(1, w // stride)
         return CNNConfig(self.name + "-reduced", tuple(small), num_classes=10)
 
@@ -164,6 +207,17 @@ def residual_blocks(cfg: "CNNConfig") -> Tuple[ResBlockSpec, ...]:
 # ---------------------------------------------------------------------------
 
 
+def _maxpool(name: str, c: int, h: int, w: int, *, k: int = 2,
+             stride: int = 2) -> ConvLayerSpec:
+    """Explicit maxpool node (c_out == c_in, zero weights)."""
+    return ConvLayerSpec(name, "maxpool", k, k, c, c, stride, h, w)
+
+
+def _gap(c: int, h: int, w: int, name: str = "gap") -> ConvLayerSpec:
+    """Global-average-pool node: the whole map is the window, out is 1x1."""
+    return ConvLayerSpec(name, "gap", h, w, c, c, max(h, w), h, w)
+
+
 def _vgg16() -> CNNConfig:
     cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
            512, 512, 512, "M", 512, 512, 512, "M"]
@@ -171,15 +225,20 @@ def _vgg16() -> CNNConfig:
     h = w = 224
     c_in = 3
     i = 0
+    pi = 0
     for v in cfg:
         if v == "M":
+            layers.append(_maxpool(f"pool{pi}", c_in, h, w))
+            pi += 1
             h //= 2
             w //= 2
             continue
         layers.append(ConvLayerSpec(f"conv{i}", "conv", 3, 3, c_in, v, 1, h, w))
         c_in = v
         i += 1
-    # fc layers as 1x1 convs on the pooled feature map (HPIPE style)
+    # fc layers as 1x1 convs on the pooled feature map (HPIPE style);
+    # fc0 consumes the 7x7 map directly (VALID 7x7 kernel), so VGG has no
+    # GAP node — the five maxpools are its whole pooling topology
     layers.append(ConvLayerSpec("fc0", "fc", 7, 7, 512, 4096, 7, 7, 7))
     layers.append(ConvLayerSpec("fc1", "fc", 1, 1, 4096, 4096, 1, 1, 1))
     layers.append(ConvLayerSpec("fc2", "fc", 1, 1, 4096, 1000, 1, 1, 1))
@@ -190,6 +249,7 @@ def _resnet(depth: int) -> CNNConfig:
     """ResNet-18 (basic blocks) or ResNet-50 (bottleneck blocks)."""
     layers: List[ConvLayerSpec] = []
     layers.append(ConvLayerSpec("stem", "conv", 7, 7, 3, 64, 2, 224, 224))
+    layers.append(_maxpool("maxpool", 64, 112, 112, k=3))
     h = w = 56   # after stem stride-2 and 3x3 maxpool stride-2
 
     if depth == 18:
@@ -211,6 +271,7 @@ def _resnet(depth: int) -> CNNConfig:
                         f"s{si}b{b}ds", "pwconv", 1, 1, c_in, c, stride,
                         h * stride, w * stride))
                 c_in = c
+        layers.append(_gap(512, 7, 7))
         layers.append(ConvLayerSpec("fc", "fc", 1, 1, 512, 1000, 1, 1, 1))
         return CNNConfig("resnet18", tuple(layers))
 
@@ -236,6 +297,7 @@ def _resnet(depth: int) -> CNNConfig:
                         f"s{si}b{b}ds", "pwconv", 1, 1, c_in, out, stride,
                         h * stride, w * stride))
                 c_in = out
+        layers.append(_gap(2048, 7, 7))
         layers.append(ConvLayerSpec("fc", "fc", 1, 1, 2048, 1000, 1, 1, 1))
         return CNNConfig("resnet50", tuple(layers))
 
@@ -255,6 +317,7 @@ def _mobilenet_v1() -> CNNConfig:
         h, w = h // s, w // s
         layers.append(ConvLayerSpec(f"pw{i}", "pwconv", 1, 1, c_in, c, 1, h, w))
         c_in = c
+    layers.append(_gap(1024, 7, 7))
     layers.append(ConvLayerSpec("fc", "fc", 1, 1, 1024, 1000, 1, 1, 1))
     return CNNConfig("mobilenetv1", tuple(layers))
 
@@ -283,6 +346,7 @@ def _mobilenet_v2() -> CNNConfig:
             c_in = c
             i += 1
     layers.append(ConvLayerSpec("head", "pwconv", 1, 1, 320, 1280, 1, 7, 7))
+    layers.append(_gap(1280, 7, 7))
     layers.append(ConvLayerSpec("fc", "fc", 1, 1, 1280, 1000, 1, 1, 1))
     return CNNConfig("mobilenetv2", tuple(layers))
 
@@ -308,6 +372,7 @@ def _mobilenet_v3() -> CNNConfig:
         layers.append(ConvLayerSpec(f"b{i}pj", "pwconv", 1, 1, exp, c, 1, h, w))
         c_in = c
     layers.append(ConvLayerSpec("head0", "pwconv", 1, 1, 160, 960, 1, 7, 7))
+    layers.append(_gap(960, 7, 7))
     layers.append(ConvLayerSpec("head1", "fc", 1, 1, 960, 1280, 1, 1, 1))
     layers.append(ConvLayerSpec("fc", "fc", 1, 1, 1280, 1000, 1, 1, 1))
     return CNNConfig("mobilenetv3", tuple(layers))
@@ -321,18 +386,26 @@ def mini_resnet18(hw: int = 32, width: int = 32,
     Algorithm 1 genuinely offloads layers to HBM (the full-size nets would
     take minutes per image under the interpreter).
 
-    Structure mirrors ``_resnet(18)``: stride-1 3x3 stem (+ the model's
-    maxpool halving), ``stages`` stages (up to ResNet-18's four) of two
-    basic blocks each, with stride-2 transitions and pwconv downsamples,
-    then an fc head.  ``stages=4`` gives the full 21-engine pipeline
-    depth at executable scale — the shape the dispatch-overhead
+    Structure mirrors ``_resnet(18)``: stride-1 3x3 stem + an explicit
+    3x3/stride-2 maxpool node, ``stages`` stages (up to ResNet-18's four)
+    of two basic blocks each, with stride-2 transitions and pwconv
+    downsamples, then an explicit GAP node (when the final map is still
+    spatial) and an fc head.  ``stages=4`` gives the full four-stage
+    pipeline depth at executable scale — the shape the dispatch-overhead
     benchmark uses.
     """
     if not 1 <= stages <= 4:
         raise ValueError("mini_resnet18 supports 1..4 stages")
+    if hw % 2:
+        # the maxpool node emits ceil(hw/2) rows while this builder
+        # floor-halves the next layer's declared in_h — reject odd hw
+        # rather than desynchronize the declared graph from execution
+        raise ValueError("mini_resnet18: hw must be even (the stem "
+                         "maxpool halves the map)")
     layers: List[ConvLayerSpec] = []
     layers.append(ConvLayerSpec("stem", "conv", 3, 3, 3, width, 1, hw, hw))
-    h = w = hw // 2                    # model applies 3x3 maxpool stride 2
+    layers.append(_maxpool("maxpool", width, hw, hw, k=3))
+    h = w = hw // 2
     c_in = width
     for si, (c, blocks) in enumerate(
             [(width * 2 ** min(s, 3), 2) for s in range(stages)]):
@@ -341,9 +414,10 @@ def mini_resnet18(hw: int = 32, width: int = 32,
             in_h, in_w = h, w
             if stride == 2:
                 if (h > 1 and h % 2) or (w > 1 and w % 2):
-                    # an odd map would make ConvLayerSpec.out_h (floor)
-                    # diverge from the kernels' SAME output (ceil) —
-                    # reject rather than desynchronize Eq. 2 accounting
+                    # an odd map would make this builder's floor-halved
+                    # next-layer in_h diverge from the kernels' SAME
+                    # output (ceil, == ConvLayerSpec.out_h) — reject
+                    # rather than desynchronize the declared graph
                     raise ValueError(
                         f"mini_resnet18: stride-2 transition on an odd "
                         f"{h}x{w} map; pick hw so maps stay even (or 1) "
@@ -358,8 +432,57 @@ def mini_resnet18(hw: int = 32, width: int = 32,
                     f"s{si}b{b}ds", "pwconv", 1, 1, c_in, c, stride,
                     in_h, in_w))
             c_in = c
+    if h > 1 or w > 1:
+        layers.append(_gap(c_in, h, w))
     layers.append(ConvLayerSpec("fc", "fc", 1, 1, c_in, 10, 1, 1, 1))
     return CNNConfig("resnet18-mini", tuple(layers), num_classes=10)
+
+
+def mini_resnet50(hw: int = 32, width: int = 16,
+                  stages: int = 2) -> CNNConfig:
+    """ResNet-50-topology network (BOTTLENECK blocks: 1x1 -> 3x3 -> 1x1
+    with 4x expansion + pwconv downsample) at executable scale — the
+    config the bottleneck-fusion differential tests run end to end in
+    interpret mode.  One block per stage keeps the pipeline small; the
+    block structure (three convs + ds, names ``s{i}b0c{0,1,2}`` /
+    ``s{i}b0ds``) is exactly ``_resnet(50)``'s, so ``residual_blocks``
+    groups it identically and ``res_block_int8`` fuses it the same way.
+    """
+    if not 1 <= stages <= 4:
+        raise ValueError("mini_resnet50 supports 1..4 stages")
+    if hw % 2:
+        raise ValueError("mini_resnet50: hw must be even (the stem "
+                         "maxpool halves the map)")
+    layers: List[ConvLayerSpec] = []
+    layers.append(ConvLayerSpec("stem", "conv", 3, 3, 3, width, 1, hw, hw))
+    layers.append(_maxpool("maxpool", width, hw, hw, k=3))
+    h = w = hw // 2
+    c_in = width
+    for si in range(stages):
+        mid = width * 2 ** min(si, 3)
+        out = 4 * mid
+        stride = 2 if si > 0 else 1
+        in_h, in_w = h, w
+        if stride == 2:
+            if (h > 1 and h % 2) or (w > 1 and w % 2):
+                raise ValueError(
+                    f"mini_resnet50: stride-2 transition on an odd {h}x{w} "
+                    f"map; pick hw so maps stay even (or 1) through all "
+                    f"{stages} stages")
+            h, w = max(1, h // 2), max(1, w // 2)
+        layers.append(ConvLayerSpec(
+            f"s{si}b0c0", "pwconv", 1, 1, c_in, mid, 1, in_h, in_w))
+        layers.append(ConvLayerSpec(
+            f"s{si}b0c1", "conv", 3, 3, mid, mid, stride, in_h, in_w))
+        layers.append(ConvLayerSpec(
+            f"s{si}b0c2", "pwconv", 1, 1, mid, out, 1, h, w))
+        layers.append(ConvLayerSpec(
+            f"s{si}b0ds", "pwconv", 1, 1, c_in, out, stride, in_h, in_w))
+        c_in = out
+    if h > 1 or w > 1:
+        layers.append(_gap(c_in, h, w))
+    layers.append(ConvLayerSpec("fc", "fc", 1, 1, c_in, 10, 1, 1, 1))
+    return CNNConfig("resnet50-mini", tuple(layers), num_classes=10)
 
 
 CNN_CONFIGS = {

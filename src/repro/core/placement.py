@@ -22,6 +22,12 @@ M20K_BITS = 20480
 CHAIN_BITS = 80
 CHAINS_PER_PC = 3                 # 240 of 256 bits per PC (§III-B)
 
+# Pooling topology nodes are placed and costed like every engine (their
+# activation line buffers land in the BRAM budget), but they are
+# weightless: no M20Ks to save (Eq. 1 score is negative, so Algorithm 1
+# never offloads them), no AI-TBs to balance, comparator/accumulator
+# cycles off the critical path.
+
 
 # ---------------------------------------------------------------------------
 # parallelism allocation (the HPIPE compiler's balancing pass, §II-B)
@@ -40,8 +46,12 @@ class LayerPlan:
     def cycles_per_image(self) -> int:
         """Compute cycles with full-width parallelism: each cycle one
         (p_i x 10-weight, p_o-channel) chain group advances all out_w
-        positions; rows are processed line by line."""
+        positions; rows are processed line by line.  Pool nodes sweep one
+        output line per cycle on fabric comparators/accumulators — never
+        the pipeline bottleneck."""
         s = self.spec
+        if s.is_pool:
+            return s.out_h
         ci_eff = s.c_in if s.kind != "dwconv" else 1
         co_eff = s.c_out if s.kind != "dwconv" else s.c_in
         depth = -(-ci_eff * s.k_h * s.k_w // (10 * self.p_i))
@@ -50,7 +60,10 @@ class LayerPlan:
 
     @property
     def tensor_blocks(self) -> int:
-        """AI-TBs consumed: one chain covers 3 adjacent output columns."""
+        """AI-TBs consumed: one chain covers 3 adjacent output columns.
+        Pool nodes do no MACs and consume none."""
+        if self.spec.is_pool:
+            return 0
         return self.p_i * self.p_o * -(-self.spec.out_w // 3)
 
     @property
@@ -74,12 +87,17 @@ def allocate_parallelism(cfg: CNNConfig, tb_budget: int,
     bottleneck layer while tensor blocks remain (HPIPE's compiler strategy:
     'increase the throughput of layers that would otherwise bottleneck')."""
     plans = [LayerPlan(spec=l) for l in cfg.layers]
+    # pool nodes keep (1, 1): weightless comparator/accumulator engines
+    # have no chain parallelism to balance and no AI-TBs to spend
+    balance = [p for p in plans if not p.spec.is_pool]
+    if not balance:
+        return plans
 
     def used() -> int:
         return sum(p.tensor_blocks for p in plans)
 
     while True:
-        bott = max(plans, key=lambda p: p.cycles_per_image)
+        bott = max(balance, key=lambda p: p.cycles_per_image)
         s = bott.spec
         ci_eff = (s.c_in if s.kind != "dwconv" else 1) * s.k_h * s.k_w
         co_eff = s.c_out if s.kind != "dwconv" else s.c_in

@@ -122,9 +122,16 @@ class PipelinePlan:
         one output row).  ``word_scale`` divides word counts so big layers
         simulate quickly (auto-picked to keep <=64 words/act); returns
         (config, scale) so callers can rescale totals back."""
-        streamed = self.streamed
+        # only nodes with nonzero Eq. 2 demand enter the sim: weightless
+        # topology nodes (maxpool / GAP) never hold the HBM tier under
+        # compile(), but a caller-forced plan could place one there — a
+        # zero-word engine would otherwise round up to 1 word/act and
+        # corrupt the counters, so they are filtered here
+        streamed = tuple(s for s in self.streamed
+                         if s.weight_words_per_row > 0)
         if not streamed:
-            raise ValueError("plan streams no layers; nothing to simulate")
+            raise ValueError("plan streams no weight words; "
+                             "nothing to simulate")
         wpr = [s.weight_words_per_row for s in streamed]
         if word_scale is None:
             word_scale = max(1, max(wpr) // 64)

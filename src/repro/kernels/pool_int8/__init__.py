@@ -1,0 +1,4 @@
+from repro.kernels.pool_int8.ops import (global_avgpool_int8,  # noqa: F401
+                                         maxpool_int8)
+from repro.kernels.pool_int8.ref import (global_avgpool_int8_ref,  # noqa: F401
+                                         maxpool_int8_ref)

@@ -1,0 +1,109 @@
+"""Pooling topology nodes as Pallas TPU kernels.
+
+H2PIPE emits a hardware engine for every CNN graph node — pooling
+included: a maxpool engine is a line buffer plus comparator trees, a
+global-average-pool engine is a per-channel accumulator bank.  The TPU
+mapping follows the conv engine (``kernels/conv2d_int8``):
+
+``_maxpool_kernel``   grid (B, H_out); a VMEM line buffer holds the k_h
+                      input rows under the window (DMA'd per output row,
+                      the same sliding-window discipline as the conv line
+                      buffer), and the k_h x k_w taps reduce with
+                      ``jnp.maximum`` on the VPU — comparators, no MACs,
+                      no weights, no Eq. 2 traffic.
+``_gap_kernel``       grid (B,); the (small, end-of-net) spatial map sits
+                      in VMEM, channels accumulate in int32 (exact — the
+                      sums fit f32's integer range, so the requantized
+                      mean is bit-identical to the float32 reference),
+                      then the model's activation quantization emits the
+                      1x1 int8 map.
+
+Inputs are pre-padded by the ops wrapper (maxpool pads with int8 -128,
+the identity of max — the float reference pads with +inf under min; both
+can never win), so kernels have no boundary conditionals.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import tpu_compiler_params
+
+
+def _row_slice(rows_buf, i: int, j: int, stride: int, w_out: int):
+    """Strided width slice of line-buffer row i: cols j, j+s, ..."""
+    c = rows_buf.shape[-1]
+    return jax.lax.slice(
+        rows_buf[i], (j, 0), (j + (w_out - 1) * stride + 1, c),
+        (stride, 1))                                      # [w_out, C]
+
+
+def _maxpool_kernel(x_hbm_ref, o_ref, rows_buf, sem, *,
+                    k_h: int, k_w: int, stride: int, w_out: int):
+    b = pl.program_id(0)
+    r = pl.program_id(1)
+    cp = pltpu.make_async_copy(
+        x_hbm_ref.at[b, pl.ds(r * stride, k_h)], rows_buf, sem)
+    cp.start()
+    cp.wait()
+    acc = jnp.full((w_out, o_ref.shape[-1]), -128, jnp.int8)
+    for i in range(k_h):
+        for j in range(k_w):
+            acc = jnp.maximum(acc, _row_slice(rows_buf, i, j, stride, w_out))
+    o_ref[0, 0] = acc
+
+
+def maxpool_int8_kernel(x_padded, *, k_h: int, k_w: int, stride: int,
+                        interpret: bool = False):
+    """x_padded: [B, H_pad, W_pad, C] int8 (already SAME-padded with -128).
+    Returns [B, H_out, W_out, C] int8."""
+    B, H_pad, W_pad, C = x_padded.shape
+    H_out = (H_pad - k_h) // stride + 1
+    W_out = (W_pad - k_w) // stride + 1
+    return pl.pallas_call(
+        functools.partial(_maxpool_kernel, k_h=k_h, k_w=k_w, stride=stride,
+                          w_out=W_out),
+        grid=(B, H_out),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],   # activations in HBM
+        out_specs=pl.BlockSpec((1, 1, W_out, C), lambda b, r: (b, r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H_out, W_out, C), jnp.int8),
+        scratch_shapes=[
+            pltpu.VMEM((k_h, W_pad, C), jnp.int8),      # the line buffer
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(x_padded)
+
+
+def _gap_kernel(x_ref, o_ref, *, hw: int, act_scale: float):
+    s = jnp.sum(x_ref[0].astype(jnp.int32), axis=(0, 1))        # [C] exact
+    m = s.astype(jnp.float32) / jnp.float32(hw)   # mean = sum / count, as
+    o_ref[0, 0, 0] = jnp.clip(jnp.round(m / act_scale),   # jnp.mean divides
+                              -127, 127).astype(jnp.int8)
+
+
+def global_avgpool_int8_kernel(x, *, act_scale: float = 0.05,
+                               interpret: bool = False):
+    """x: [B, H, W, C] int8 -> [B, 1, 1, C] int8 (requantized mean).
+
+    The int32 channel sums are exact and fit f32's integer range, and the
+    kernel divides by the count exactly as ``jnp.mean`` does — so the
+    requantized mean matches the float32 reference bit for bit
+    (differential-tested across shapes)."""
+    B, H, W, C = x.shape
+    return pl.pallas_call(
+        functools.partial(_gap_kernel, hw=H * W, act_scale=act_scale),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, H, W, C), lambda b: (b, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, 1, C), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1, 1, C), jnp.int8),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel",)),
+    )(x)

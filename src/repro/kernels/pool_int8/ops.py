@@ -1,0 +1,43 @@
+"""Jit'd wrappers: SAME padding around the Pallas pooling kernels.
+
+Padding geometry comes from the conv ops' ``same_padded_width`` — the
+single source of truth the compile-time VMEM accounting
+(``repro.compiler.engines``) also derives line-buffer sizes from, so
+allocation and execution cannot drift apart.  Maxpool pads with int8
+-128 (the identity of max; SAME windows always contain at least one
+real element, so padding never wins — equivalent to the reference's
++inf-under-min float padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d_int8.ops import same_padded_width
+from repro.kernels.pool_int8.kernel import (global_avgpool_int8_kernel,
+                                            maxpool_int8_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "interpret"))
+def maxpool_int8(x, *, k: int, stride: int, interpret: bool = False):
+    """SAME maxpool, int8 in / int8 out, via the line-buffer Pallas
+    kernel.  x: [B, H, W, C] -> [B, ceil(H/s), ceil(W/s), C]."""
+    B, H, W, C = x.shape
+    pad_h = same_padded_width(H, k, stride) - H
+    pad_w = same_padded_width(W, k, stride) - W
+    xp = jnp.pad(x, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                     (pad_w // 2, pad_w - pad_w // 2), (0, 0)),
+                 constant_values=jnp.int8(-128))
+    return maxpool_int8_kernel(xp, k_h=k, k_w=k, stride=stride,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("act_scale", "interpret"))
+def global_avgpool_int8(x, *, act_scale: float = 0.05,
+                        interpret: bool = False):
+    """Global average pool + activation requantization, int8 in/out.
+    x: [B, H, W, C] -> [B, 1, 1, C]."""
+    return global_avgpool_int8_kernel(x, act_scale=act_scale,
+                                      interpret=interpret)

@@ -1,0 +1,38 @@
+"""jnp reference semantics for the pooling topology nodes.
+
+These are the EXACT formulas the model's forward pass used when pooling
+was still implicit wiring inside ``cnn_forward`` (pre topology-node
+migration), kept verbatim so promoting the ops to engines changes where
+they run, never a single output bit:
+
+  * maxpool: max over a SAME-padded k x k window — computed as
+    ``-reduce_window(-x, min)`` in float32 with +inf padding, exactly the
+    old stem-pool expression (padding can never win a max);
+  * global average pool: float32 mean over the spatial map, then the
+    model's activation quantization (divide by act_scale, round to
+    nearest-even, clip) back to int8.
+
+The Pallas kernels in ``kernel.py`` are differential-tested bit-exact
+against these (tests/test_topology_engines.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride"))
+def maxpool_int8_ref(x, *, k: int, stride: int):
+    """x: [B, H, W, C] int8 -> [B, ceil(H/s), ceil(W/s), C] int8."""
+    return -jax.lax.reduce_window(
+        -x.astype(jnp.float32), jnp.inf, jax.lax.min,
+        (1, k, k, 1), (1, stride, stride, 1), "SAME").astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("act_scale",))
+def global_avgpool_int8_ref(x, *, act_scale: float = 0.05):
+    """x: [B, H, W, C] int8 -> [B, 1, 1, C] int8 (requantized mean)."""
+    m = jnp.mean(x.astype(jnp.float32), axis=(1, 2), keepdims=True)
+    return jnp.clip(jnp.round(m / act_scale), -127, 127).astype(jnp.int8)

@@ -21,8 +21,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.cnn import (CNNConfig, ConvLayerSpec, ResBlockSpec,
-                               residual_blocks)
+from repro.configs.cnn import (POOL_KINDS, CNNConfig, ConvLayerSpec,
+                               ResBlockSpec, residual_blocks)
+from repro.kernels.pool_int8.ref import (global_avgpool_int8_ref,
+                                         maxpool_int8_ref)
 from repro.kernels.quant import requant_epilogue
 from repro.models.layers import maybe_axis, MODEL_AXIS
 
@@ -81,16 +83,24 @@ def conv_layer_forward(params: Params, spec: ConvLayerSpec, x,
 
 
 def init_cnn_params(key, cfg: CNNConfig) -> Params:
+    """Parameters for every weighted node; pool nodes (maxpool / GAP) are
+    weightless topology engines and get no entry."""
     ks = jax.random.split(key, len(cfg.layers))
-    return {l.name: init_conv_layer(k, l) for k, l in zip(ks, cfg.layers)}
+    return {l.name: init_conv_layer(k, l)
+            for k, l in zip(ks, cfg.layers) if not l.is_pool}
 
 
 def cnn_param_specs(cfg: CNNConfig) -> Params:
-    return {l.name: conv_layer_specs(l) for l in cfg.layers}
+    return {l.name: conv_layer_specs(l) for l in cfg.layers if not l.is_pool}
 
 
-def _is_residual_add(cfg: CNNConfig, idx: int) -> bool:
-    return cfg.name.startswith("resnet")
+def pool_forward(spec: ConvLayerSpec, x, act_scale: float = 0.05):
+    """The jnp reference for one pooling topology node — the same
+    numerics the Pallas pool engines are differential-tested against."""
+    if spec.kind == "maxpool":
+        return maxpool_int8_ref(x, k=spec.k_h, stride=spec.stride)
+    assert spec.kind == "gap", spec.kind
+    return global_avgpool_int8_ref(x, act_scale=act_scale)
 
 
 # engine(spec, layer_params, x, relu) -> Optional[(y_q, y_float)].  The
@@ -121,13 +131,17 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
     Residual/downsample wiring for ResNets comes from
     ``configs.cnn.residual_blocks`` — the same grouping the compiler's
     block binding uses, so the topology and the bindings cannot drift.
+    Pooling is NOT wired here: maxpool and global-average-pool are
+    first-class graph nodes in ``cfg.layers``, offered to the engine hook
+    like any conv (the compiler binds them to the pool engines) — nothing
+    about the topology is implicit anymore.
 
-    ``engine``: per-layer dispatch hook.  When provided, each conv/fc layer
+    ``engine``: per-layer dispatch hook.  When provided, each node
     is offered to the hook first (the pipeline executor routes it to its
     compile-time engine binding — pinned or HBM-streamed Pallas kernels,
-    including the grouped depthwise engine); layers the hook declines
-    (returns None for — e.g. layers unknown to the plan) run the jnp path,
-    so topology wiring lives in exactly one place.
+    including the grouped depthwise and the pooling engines); nodes the
+    hook declines (returns None for — e.g. layers unknown to the plan)
+    run the jnp path, so every node executes exactly once either way.
 
     ``block_engine``: block-granular hook, offered each residual block
     BEFORE its layers run individually; declining falls back to the
@@ -136,9 +150,11 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
 
     def apply_layer(spec: ConvLayerSpec, x, relu: bool = True):
         if engine is not None:
-            out = engine(spec, params[spec.name], x, relu)
+            out = engine(spec, params.get(spec.name, {}), x, relu)
             if out is not None:
                 return out
+        if spec.is_pool:
+            return pool_forward(spec, x), None
         return conv_layer_forward(params[spec.name], spec, x, relu=relu)
 
     x = images
@@ -148,13 +164,8 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
     while i < len(layers):
         spec = layers[i]
         name = spec.name
-        if name == "stem":
-            x, _ = apply_layer(spec, x)
-            if cfg.name.startswith("resnet"):
-                # 3x3 maxpool stride 2
-                x = -jax.lax.reduce_window(
-                    -x.astype(jnp.float32), jnp.inf, jax.lax.min,
-                    (1, 3, 3, 1), (1, 2, 2, 1), "SAME").astype(jnp.int8)
+        if spec.is_pool:
+            x, _ = apply_layer(spec, x, relu=False)
             i += 1
             continue
         if name in blocks:
@@ -178,10 +189,8 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
             i += len(blk.members)
             continue
         if name.startswith("fc") or name in ("head0", "head1", "head"):
-            if x.ndim == 4 and x.shape[1] > spec.k_h:
-                # global average pool before the first fc (HPIPE folds this)
-                x = jnp.mean(x.astype(jnp.float32), axis=(1, 2), keepdims=True)
-                x = jnp.clip(jnp.round(x / 0.05), -127, 127).astype(jnp.int8)
+            # the map reaching an fc head is whatever the graph's explicit
+            # pool nodes produced — no implicit GAP here anymore
             last = i == len(layers) - 1
             x, y_f = apply_layer(spec, x, relu=not last)
             if last:

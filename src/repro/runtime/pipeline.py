@@ -24,10 +24,14 @@ a CNN under that :class:`CompiledPipeline`, through one of two backends:
     test) and handy for debugging a single engine; this is what every
     ``run()`` was before the fused path existed.
 
-Topology wiring (residual adds, maxpool, global-average-pool) stays in
-``models.cnn.cnn_forward``; both backends plug in as its
-``engine``/``block_engine`` hooks, so the pipelined execution is the
-SAME network the functional reference runs — outputs are bit-identical.
+The topology is owned end to end by the compiler: maxpool and
+global-average-pool are first-class graph nodes bound to their own pool
+engines, and residual blocks (basic and bottleneck) fuse to
+``res_block_int8`` units — ``models.cnn.cnn_forward`` only walks
+``cfg.layers`` and offers every node to the ``engine``/``block_engine``
+hooks both backends plug in, so the pipelined execution is the SAME
+network the functional reference runs — outputs are bit-identical, and
+100% of the graph appears in the engine table and the reports.
 
 The report cross-checks three views of the weight path that the paper
 keeps consistent by construction:

@@ -1,0 +1,56 @@
+"""Regenerate the GOLDEN tables in tests/test_placement_golden.py.
+
+Run after a DELIBERATE planner change (new topology nodes, Eq. 1 tweaks,
+block-cost model changes) and paste the output over the GOLDEN /
+GOLDEN_BLOCKS literals — never regen to paper over an unexplained diff:
+
+  PYTHONPATH=src python tests/regen_placement_goldens.py
+
+Prints, per paper network at the NX2100 defaults:
+  * total node count (convs + fc heads + pool topology nodes),
+  * the offloaded set as (layer, pc, p_i, p_o) in pipeline order,
+  * the fused-block golden: (n_blocks, bottleneck count, total plan-side
+    Eq. 2 words over all block units).
+"""
+from repro import compiler
+from repro.compiler import NX2100
+from repro.configs import CNN_CONFIGS
+
+NETS = ("resnet18", "resnet50", "vgg16")
+
+
+def golden_entry(name):
+    cp = compiler.compile(CNN_CONFIGS[name], NX2100)
+    offloaded = [(s.spec.name, s.pc, s.p_i, s.p_o)
+                 for s in cp.plan.streamed]
+    return len(cp.schedules), offloaded
+
+
+def golden_blocks(name):
+    cp = compiler.compile(CNN_CONFIGS[name], NX2100)
+    bottlenecks = sum(
+        1 for b in cp.block_assignments
+        if sum(1 for m in b.members if not m.endswith("ds")) == 3)
+    words = sum(b.hbm_words_per_image for b in cp.block_assignments)
+    return len(cp.block_assignments), bottlenecks, words
+
+
+def main():
+    print("GOLDEN = {")
+    for name in NETS:
+        n, off = golden_entry(name)
+        print(f"    {name!r}: ({n}, [")
+        for row in off:
+            print(f"        {row!r},")
+        print("    ]),")
+    print("}")
+    print()
+    print("# name -> (fused block units, bottleneck units, plan Eq. 2 words)")
+    print("GOLDEN_BLOCKS = {")
+    for name in NETS:
+        print(f"    {name!r}: {golden_blocks(name)!r},")
+    print("}")
+
+
+if __name__ == "__main__":
+    main()

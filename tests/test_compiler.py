@@ -62,10 +62,13 @@ def test_engine_table_covers_every_layer():
     assert set(table) == {l.name for l in MINI.layers}
     assert table["fc"] == "stream_matmul"
     assert table["stem"] == "conv2d_int8"
+    # the pooling topology nodes are first-class engine bindings too
+    assert table["maxpool"] == "maxpool_int8"
+    assert table["gap"] == "global_avgpool_int8"
     # every residual-block member is bound at BLOCK granularity (the
     # fused res_block_int8 unit); everything else stays per-layer
     in_blocks = {m for b in cp.block_assignments for m in b.members}
-    assert in_blocks == set(table) - {"stem", "fc"}
+    assert in_blocks == set(table) - {"stem", "maxpool", "gap", "fc"}
     assert all(table[name] == "res_block_int8" for name in in_blocks)
     # vmem report covers the same layers, all within budget
     report = cp.vmem_report()
@@ -77,8 +80,9 @@ def test_engine_table_covers_every_layer():
 def test_block_units_bound_and_costed():
     """Stage 4 groups each residual block into one schedulable unit: the
     block table covers exactly the s{i}b{j} groups, each unit's VMEM
-    cost is the sum of its members plus the identity buffer, and its
-    Eq. 2 words are the streamed members' plan analytics."""
+    cost is the sum of its members plus the identity buffer plus the
+    widest intermediate activation map, and its Eq. 2 words are the
+    streamed members' plan analytics."""
     from repro.configs.cnn import residual_blocks
     cp = compiler.compile(MINI, TPU_INTERPRET)
     blocks = {b.name: b for b in residual_blocks(MINI)}
@@ -90,8 +94,9 @@ def test_block_units_bound_and_costed():
         scheds = cp.plan.schedules_for(ba.members)
         member_sum = sum(eng.vmem_bytes(s.spec, s) for s in scheds)
         first = blk.convs[0]
+        widest = max(m.out_h * m.out_w * m.c_out for m in blk.members)
         assert ba.vmem_bytes == member_sum + first.in_h * first.in_w \
-            * first.c_in
+            * first.c_in + widest
         assert ba.vmem_bytes <= TPU_INTERPRET.vmem_bytes
         assert ba.hbm_words_per_image == sum(
             s.weight_words_per_image for s in scheds if s.streamed)

@@ -1,15 +1,29 @@
 """Golden regression tests for Algorithm 1 placement.
 
 These lock in the paper-facing planner outputs — which layers offload to
-HBM, their pseudo-channel assignment, and the FIFO sizing — for the three
-networks the paper evaluates, at the NX2100 target's default budgets.  A
-compiler refactor that silently changes any of these changes the
-reproduction's claims; update the goldens only with a deliberate
-re-derivation.
+HBM, their pseudo-channel assignment, the FIFO sizing, and the fused
+residual-block units — for the three networks the paper evaluates, at
+the NX2100 target's default budgets.  A compiler refactor that silently
+changes any of these changes the reproduction's claims; update the
+goldens only with a deliberate re-derivation:
 
-Current goldens encode the paper's §VI-A structure: ResNet-18 fits
-entirely on chip (no offload), while ResNet-50 and VGG-16 stream their
-late heavy layers + fc heads, assigned clockwise PCs 0..5.
+    PYTHONPATH=src python tests/regen_placement_goldens.py
+
+and paste its output over GOLDEN / GOLDEN_BLOCKS (the script prints both
+literals; see its docstring).
+
+Current goldens encode the paper's §VI-A structure over the FULL
+topology — pool/GAP nodes included as first-class graph nodes since the
+topology-engine migration: ResNet-18 (23 nodes: 20 convs/fc + maxpool +
+GAP) fits entirely on chip, while ResNet-50 (56 nodes) and VGG-16 (21
+nodes: 13 convs + 5 maxpools + 3 fc) stream their late heavy layers +
+fc heads, assigned clockwise PCs from 0.  Pool nodes are weightless:
+they are never offloaded (Eq. 1 score < 0), always bind the pool
+engines, and contribute activation line buffers — not weights — to the
+BRAM budget (their buffers are why ResNet-50 now streams s3b1c0 too).
+All 16 ResNet-50 bottleneck blocks bind as fused ``res_block_int8``
+units under the tightened (member sum + identity + widest intermediate)
+VMEM model.
 """
 import warnings
 
@@ -19,18 +33,19 @@ from repro import compiler
 from repro.compiler import NX2100
 from repro.configs import CNN_CONFIGS
 
-# name -> (n_layers, [(layer, pc, p_i, p_o), ...] for the offloaded set)
+# name -> (n_nodes, [(layer, pc, p_i, p_o), ...] for the offloaded set)
 GOLDEN = {
-    "resnet18": (21, []),
-    "resnet50": (54, [
+    "resnet18": (23, []),
+    "resnet50": (56, [
         ("s3b0c1", 0, 16, 1),
         ("s3b0c2", 1, 2, 4),
         ("s3b0ds", 2, 4, 4),
-        ("s3b1c1", 3, 16, 1),
-        ("s3b2c1", 4, 16, 1),
-        ("fc", 5, 2, 1),
+        ("s3b1c0", 3, 8, 1),
+        ("s3b1c1", 4, 16, 1),
+        ("s3b2c1", 5, 16, 1),
+        ("fc", 6, 2, 1),
     ]),
-    "vgg16": (16, [
+    "vgg16": (21, [
         ("conv8", 0, 16, 1),
         ("conv9", 1, 16, 1),
         ("conv10", 2, 8, 1),
@@ -40,17 +55,63 @@ GOLDEN = {
     ]),
 }
 
+# name -> (fused block units, bottleneck units, plan-side Eq. 2 words
+# over all block units per image) at the NX2100 defaults
+GOLDEN_BLOCKS = {
+    "resnet18": (8, 0, 0),
+    "resnet50": (16, 16, 7890554),
+    "vgg16": (0, 0, 0),
+}
+
+POOL_ENGINES = {"maxpool": "maxpool_int8", "gap": "global_avgpool_int8"}
+
 
 @pytest.mark.parametrize("name", sorted(GOLDEN))
 def test_algorithm1_placement_golden(name):
-    n_layers, offloaded = GOLDEN[name]
+    n_nodes, offloaded = GOLDEN[name]
     cp = compiler.compile(CNN_CONFIGS[name], NX2100)
-    assert len(cp.schedules) == n_layers
+    assert len(cp.schedules) == n_nodes
     got = [(s.spec.name, s.pc, s.p_i, s.p_o) for s in cp.plan.streamed]
     assert got == offloaded
     # stage-5 validation must not have moved anything at the real device
     # budgets — the goldens are pure Algorithm 1 outputs
     assert cp.replaced == ()
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_pool_nodes_placed_pinned_on_pool_engines(name):
+    """The topology nodes are first-class in the plan: every pool/GAP
+    node appears in the schedule, pinned (weightless — Algorithm 1 can
+    never score them positive), bound to its dedicated pool engine."""
+    cp = compiler.compile(CNN_CONFIGS[name], NX2100)
+    table = cp.engine_table()
+    pools = [l for l in CNN_CONFIGS[name].layers if l.is_pool]
+    assert pools, f"{name} config carries no explicit pool nodes?"
+    for spec in pools:
+        sched = cp.plan.schedule_for(spec.name)
+        assert not sched.streamed
+        assert sched.weight_words_per_image == 0
+        assert table[spec.name] == POOL_ENGINES[spec.kind]
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_BLOCKS))
+def test_fused_block_units_golden(name):
+    """Block-unit golden: how many residual blocks bind as fused
+    ``res_block_int8`` units at the NX2100 defaults, how many of those
+    are BOTTLENECK (three-conv) units, and the plan-side Eq. 2 words the
+    units own.  ResNet-50 — the paper's 5.1x headline net — must fuse
+    every one of its 16 bottleneck blocks."""
+    n_units, n_bottleneck, words = GOLDEN_BLOCKS[name]
+    cp = compiler.compile(CNN_CONFIGS[name], NX2100)
+    assert len(cp.block_assignments) == n_units
+    got_bottleneck = sum(
+        1 for b in cp.block_assignments
+        if sum(1 for m in b.members if not m.endswith("ds")) == 3)
+    assert got_bottleneck == n_bottleneck
+    assert sum(b.hbm_words_per_image for b in cp.block_assignments) == words
+    for b in cp.block_assignments:
+        assert b.engine == "res_block_int8"
+        assert b.vmem_bytes <= NX2100.vmem_bytes
 
 
 @pytest.mark.parametrize("name", sorted(GOLDEN))
