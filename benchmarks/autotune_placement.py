@@ -1,0 +1,91 @@
+"""Greedy vs co-optimized placement: the autotuner's acceptance artifact.
+
+Runs the search-based placement + FIFO co-optimizer
+(:mod:`repro.compiler.autotune`) against the one-shot greedy Alg. 1 seed
+on the executable mini networks @ TPU_INTERPRET, and records both sides
+of every metric the search trades:
+
+  * ``greedy_stall_cycles`` / ``tuned_stall_cycles`` — credit-mode
+    tail-engine stalls from the exact §V-A ``fifo_sim`` (same fixed
+    ``word_scale`` on both sides, so the counts are comparable);
+  * ``greedy_m20ks`` / ``tuned_m20ks`` — on-chip M20K footprint at the
+    plans' actual FIFO depths (``hbm_model.fifo_m20k_cost``);
+  * ``greedy_images_per_s`` / ``tuned_images_per_s`` — the §VI
+    throughput model (the search never trades this down: throughput
+    parity with the seed is a hard feasibility constraint);
+  * the tuned knob values (burst / bm_words / laststage / offload count)
+    and the co-optimized ``serving_credits`` bound.
+
+Every number is deterministic (fixed search seed, analytic + simulated
+cost model — no wall clocks), so the artifact diffs exactly:
+bench_diff.py gates ``tuned_stall_cycles`` and ``tuned_m20ks`` against
+growth and ``tuned_images_per_s`` against drops.  The compiled tuned
+pipeline re-passes the whole-topology Eq. 2 cross-check
+(``eq2_report().verify()``) before its row is emitted — a tuned plan
+that drifted from the dispatch accounting fails the benchmark, not just
+a test.
+
+  PYTHONPATH=src python benchmarks/autotune_placement.py \
+      [--iterations N] [--seed S] [--smoke] [--json BENCH_autotune.json]
+
+``--smoke`` is the CI size (fewer annealing iterations; the bm-FIFO
+deepening win is found within the first ~50 moves, so smoke results
+match the full run on these nets).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro import compiler
+from repro.compiler.autotune import AutotuneConfig
+from repro.configs.cnn import mini_resnet18, mini_resnet50
+
+NETS = (
+    ("mini_resnet18", lambda: mini_resnet18(hw=8, width=16, stages=4)),
+    ("mini_resnet50", lambda: mini_resnet50(hw=8, width=16, stages=4)),
+)
+
+
+def bench(iterations: int, seed: int) -> List[Dict]:
+    rows: List[Dict] = []
+    for label, build in NETS:
+        cfg = build()
+        at = AutotuneConfig(seed=seed, iterations=iterations)
+        cp = compiler.compile(cfg, compiler.TPU_INTERPRET, autotune=at)
+        cp.eq2_report().verify()      # tuned plan must still cross-check
+        row: Dict = {"name": f"autotune/{label}",
+                     "topology_nodes": len(cp.plan.schedules)}
+        row.update(cp.tuning.summary())
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--iterations", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer annealing iterations)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the BENCH_autotune.json artifact here")
+    args = ap.parse_args()
+    iterations = min(args.iterations, 150) if args.smoke else args.iterations
+
+    rows = bench(iterations, args.seed)
+    for row in rows:
+        print("  ".join(f"{k}={v}" for k, v in sorted(row.items())))
+        if not row["improved"]:
+            raise SystemExit(
+                f"{row['name']}: tuned plan failed to beat the greedy seed "
+                f"on stalls or M20Ks — the acceptance bar of this artifact")
+    if args.json:
+        artifact = {"benchmark": "autotune_placement", "rows": rows}
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,10 @@
 """Benchmark regression gate: diff two benchmark JSON artifacts.
 
-Works over both artifact families (``BENCH_pipeline.json`` from
-pipeline_throughput.py and ``BENCH_serving.json`` from
-serving_throughput.py): rows are matched on ``name`` and only the gated
-metrics *present in a row* are compared, so one gate serves both.
+Works over all three artifact families (``BENCH_pipeline.json`` from
+pipeline_throughput.py, ``BENCH_serving.json`` from
+serving_throughput.py, ``BENCH_autotune.json`` from
+autotune_placement.py): rows are matched on ``name`` and only the gated
+metrics *present in a row* are compared, so one gate serves all.
 
   * ``model_images_per_s``     may not DROP by more than the threshold
                                (deterministic §VI model output);
@@ -17,7 +18,13 @@ metrics *present in a row* are compared, so one gate serves both.
                                measured back to back on the same
                                machine, so host noise largely cancels;
                                the noise-robust half of the serving
-                               gate).
+                               gate);
+  * ``tuned_stall_cycles`` /
+    ``tuned_m20ks``            may not GROW, and
+  * ``tuned_images_per_s``     may not DROP (autotune rows: fixed-seed
+                               search over deterministic sim/analytic
+                               cost — any drift is a code change in the
+                               optimizer or its cost model, not noise).
 
 The pipeline wall-clock fields stay ungated (CI noise), and the serving
 throughput gate accepts some flake risk by design: a real >5% serving
@@ -53,6 +60,11 @@ GATED_METRICS = {
                                           # nodes included, 0 words each)
     "serving_images_per_s": "down",
     "serving_speedup_x": "down",
+    # autotune_placement.py rows (deterministic search + sim outputs):
+    # the co-optimizer may never get worse at finding plans
+    "tuned_stall_cycles": "up",
+    "tuned_m20ks": "up",
+    "tuned_images_per_s": "down",
 }
 
 

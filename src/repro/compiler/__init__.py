@@ -17,13 +17,24 @@ Public API:
     (``backend="fused"`` one-dispatch jit per input shape, cached;
     ``backend="eager"`` per-layer walk), plus ``stats_template()`` /
     ``eq2_report().verify()`` — the hard-fail plan-vs-dispatch Eq. 2
-    cross-check over 100% of the topology, execution-free.
+    cross-check over 100% of the topology, execution-free;
+  * :func:`autotune_plan` / :class:`AutotuneConfig` — the search-based
+    placement + FIFO co-optimizer (``compile(cfg, target,
+    autotune=...)`` is the integrated path): joint exploration of the
+    offload set, burst length, burst-matching / last-stage FIFO depths
+    and serving credits, seeded by the greedy Alg. 1 plan, costed by
+    the exact credit-mode ``fifo_sim`` + §VI throughput model + M20K
+    accounting, never worse than the seed and deterministic per seed.
 
 ``repro.core.build_pipeline_plan`` remains as a deprecation shim over
 ``plan_pipeline(cfg, NX2100.replace(**kwargs))`` — stages 1-3 only,
 preserving pre-compiler placements verbatim; ``compile()`` adds engine
 binding and VMEM validation on top.
 """
+from repro.compiler.autotune import (AutotuneConfig,  # noqa: F401
+                                     AutotuneError, AutotuneResult,
+                                     Candidate, Evaluation, autotune_plan,
+                                     solve_serving_credits)
 from repro.compiler.engines import (EngineContext, LayerEngine,  # noqa: F401
                                     LayerExecStats, get_engine,
                                     register_engine, registered_engines,

@@ -63,9 +63,14 @@ import dataclasses
 import functools
 import threading
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Optional,
+                    Sequence, Tuple, Union)
 
 import jax
+
+if TYPE_CHECKING:                     # import cycle guard: autotune uses
+    from repro.compiler.autotune import (AutotuneConfig,  # pragma: no cover
+                                         AutotuneResult)
 
 from repro.compiler.engines import (EngineContext,  # noqa: F401 (re-export)
                                     LayerExecStats, get_engine,
@@ -150,6 +155,11 @@ class CompiledPipeline:
     assignments: Tuple[EngineAssignment, ...]
     replaced: Tuple[str, ...] = ()    # layers stage 5 moved pin -> stream
     block_assignments: Tuple[BlockAssignment, ...] = ()
+    #: search provenance when the plan came from the placement + FIFO
+    #: co-optimizer (``compile(..., autotune=...)``): the greedy-vs-tuned
+    #: evaluations plus the co-optimized serving credit bound that
+    #: ``serve()`` defaults to.  ``None`` for plain greedy compiles.
+    tuning: Optional["AutotuneResult"] = None
 
     def __post_init__(self):
         # the stage-6 trace cache + its lock are created EAGERLY (not
@@ -296,14 +306,20 @@ class CompiledPipeline:
         rep.layers.extend(self.stats_template(batch))
         return rep
 
-    def serve(self, params, *, microbatch: int = 8, credits: int = 4,
-              **kw):
+    def serve(self, params, *, microbatch: int = 8,
+              credits: Optional[int] = None, **kw):
         """Continuous-streaming serving over this pipeline: a
         :class:`~repro.runtime.cnn_serving.CnnServingEngine` packing
         mixed-size requests into ``microbatch``-shaped fused dispatches,
-        at most ``credits`` microbatches in flight (§V-A).  Use as a
-        context manager, or call ``.start()``."""
+        at most ``credits`` microbatches in flight (§V-A).  ``credits``
+        defaults to the co-optimized bound when the pipeline was
+        autotuned (``tuning.serving_credits`` — the smallest in-flight
+        count that still saturates dispatch), else 4.  Use as a context
+        manager, or call ``.start()``."""
         from repro.runtime.cnn_serving import CnnServingEngine
+        if credits is None:
+            credits = (self.tuning.serving_credits
+                       if self.tuning is not None else 4)
         return CnnServingEngine(self, params, microbatch=microbatch,
                                 credits=credits, **kw)
 
@@ -476,7 +492,8 @@ def plan_pipeline(cfg: CNNConfig, target: Target) -> PipelinePlan:
 
 
 def finalize(plan: PipelinePlan, target: Optional[Target], *,
-             replace: bool = True) -> CompiledPipeline:
+             replace: bool = True,
+             tuning: Optional["AutotuneResult"] = None) -> CompiledPipeline:
     """Stages 4-5 over an existing plan: bind every layer to a registered
     engine, then enforce the target's VMEM budget — re-placing pinned
     layers whose working set only fits when streamed, and raising
@@ -492,7 +509,8 @@ def finalize(plan: PipelinePlan, target: Optional[Target], *,
     ``with_offload``: a caller-forced offload set must not be silently
     expanded — validation fails instead).  ``target=None`` binds engines
     without budget enforcement (the deprecation-compat path for raw
-    ``PipelinePlan`` values).
+    ``PipelinePlan`` values).  ``tuning`` attaches the autotuner's
+    provenance record when the plan came out of the co-optimizer.
     """
     # engine choice depends only on the spec, so bind once per layer and
     # reuse across the re-placement and assignment passes
@@ -578,7 +596,8 @@ def finalize(plan: PipelinePlan, target: Optional[Target], *,
     return CompiledPipeline(plan=plan, target=target,
                             assignments=tuple(assignments),
                             replaced=tuple(moved),
-                            block_assignments=tuple(blocks))
+                            block_assignments=tuple(blocks),
+                            tuning=tuning)
 
 
 def make_dispatchers(compiled: CompiledPipeline, ctx: EngineContext,
@@ -648,8 +667,25 @@ def trace_fused(compiled: CompiledPipeline, params, images, *,
     return FusedTrace(fn=fn, stats=tuple(stats))
 
 
-def compile(cfg: CNNConfig, target: Target = NX2100) -> CompiledPipeline:
+def compile(cfg: CNNConfig, target: Target = NX2100, *,
+            autotune: Union[None, bool, "AutotuneConfig"] = None
+            ) -> CompiledPipeline:
     """Compile a CNN for a target: passes 1-5 up front, validated and
     executable; the stage-6 fused trace is instantiated (and cached) per
-    input shape on first ``run()``."""
-    return finalize(plan_pipeline(cfg, target), target)
+    input shape on first ``run()``.
+
+    ``autotune`` swaps stage 2-3's one-shot greedy placement + §IV-A
+    FIFO sizing for the search-based co-optimizer
+    (:mod:`repro.compiler.autotune`): ``True`` runs it with defaults, an
+    :class:`AutotuneConfig` carries explicit search knobs.  The result
+    is a normal, fully validated pipeline — same stages 4-5, same
+    ``eq2_report().verify()`` guarantees — whose tier decisions are
+    taken verbatim from the search (no stage-5 re-placement: the tuned
+    plan already satisfies the VMEM budget per layer), with the search
+    record attached as ``.tuning``."""
+    if autotune is None or autotune is False:
+        return finalize(plan_pipeline(cfg, target), target)
+    from repro.compiler.autotune import AutotuneConfig, autotune_plan
+    at = AutotuneConfig() if autotune is True else autotune
+    result = autotune_plan(cfg, target, at)
+    return finalize(result.plan, target, replace=False, tuning=result)

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # constants (paper values)
@@ -122,12 +122,22 @@ def burst_matching_fifo_words(burst: int) -> int:
     return 2 * burst
 
 
-def fifo_m20k_cost(burst: int) -> int:
+def fifo_m20k_cost(burst: int, laststage_depth: Optional[int] = None,
+                   bm_words: Optional[int] = None) -> int:
     """On-chip RAM cost (M20K blocks) of one layer's HBM plumbing: the
-    512x80b last-stage FIFO costs 2 M20Ks (512x40 mode); burst-matching
-    adds ceil(words*256b / 20kb)."""
-    last_stage = 2
-    bm_bits = burst_matching_fifo_words(burst) * 256
+    80-bit last-stage FIFO costs 2 M20Ks per 512 of depth (two 512x40
+    blocks side by side), burst-matching adds ceil(words*256b / 20kb).
+
+    Depths default to the §IV-A sizing for ``burst`` (the pre-autotuner
+    behavior: 512-deep last stage, 2-burst matching); the placement/FIFO
+    co-optimizer passes its tuned depths explicitly so deeper FIFOs are
+    charged against the BRAM budget they actually occupy."""
+    if laststage_depth is None:
+        laststage_depth = min_laststage_fifo_depth(burst)
+    if bm_words is None:
+        bm_words = burst_matching_fifo_words(burst)
+    last_stage = 2 * -(-laststage_depth // 512)
+    bm_bits = bm_words * 256
     return last_stage + -(-bm_bits // 20480)
 
 

@@ -109,13 +109,20 @@ def allocate_parallelism(cfg: CNNConfig, tb_budget: int,
             candidates.append("p_o")
         if not candidates:
             break
-        dim = max(candidates,
-                  key=lambda d: ci_eff / bott.p_i if d == "p_i"
-                  else co_eff / bott.p_o)
-        before = bott.tensor_blocks
-        setattr(bott, dim, getattr(bott, dim) * 2)
-        if used() > tb_budget:
-            setattr(bott, dim, getattr(bott, dim) // 2)
+        # try the preferred dimension first, but fall back to the other
+        # one before giving up: the cheaper dimension may still fit the
+        # remaining AI-TB budget when the preferred double does not
+        candidates.sort(key=lambda d: ci_eff / bott.p_i if d == "p_i"
+                        else co_eff / bott.p_o, reverse=True)
+        doubled = False
+        for dim in candidates:
+            setattr(bott, dim, getattr(bott, dim) * 2)
+            if used() > tb_budget:
+                setattr(bott, dim, getattr(bott, dim) // 2)
+                continue
+            doubled = True
+            break
+        if not doubled:
             break
     return plans
 
@@ -167,9 +174,13 @@ def hybrid_selection(plans: Sequence[LayerPlan], bram_m20ks: int,
     as BRAM allows; layers chosen for HBM by Algorithm 1 order.  Activations
     always stay on chip (§III-B).  Offloads highest-score layers first until
     the on-chip remainder fits."""
-    plans = [dataclasses.replace(p) if False else p for p in plans]
+    # work on copies: the caller's plans (and their offload flags) must
+    # stay untouched — the autotuner calls this in a loop over candidate
+    # plans and relies on the seed staying pristine
+    plans = [dataclasses.replace(p) for p in plans]
     for p in plans:
         p.offload = False
+        p.pc = None
     act_m20ks = sum(-(-l.spec.activation_window_bits(8) // M20K_BITS)
                     for l in plans)
     order = sorted(range(len(plans)), key=lambda i: eq1_score(plans[i]),
@@ -198,9 +209,14 @@ def hybrid_selection(plans: Sequence[LayerPlan], bram_m20ks: int,
 def assign_pseudo_channels(plans: Sequence[LayerPlan],
                            n_pc: int = hbm_model.N_PCS) -> None:
     """Clockwise assignment (§V-B): offloaded layers in pipeline order get
-    PCs 0->15 then 31->16, wrapping round-robin when layers outnumber PCs."""
+    PCs 0->15 then 31->16, wrapping round-robin when layers outnumber PCs.
+
+    Only the first ``n_pc`` pseudo-channels in clockwise die order are
+    usable (§VI-B: 31 of the NX2100's 32 close timing), so the walk must
+    never hand out an id >= ``n_pc`` — a target with 8 usable PCs gets
+    ids 0..7, never the far-stack 16..31 range."""
     clockwise = list(range(16)) + list(range(31, 15, -1))
-    clockwise = [pc for pc in clockwise if pc < n_pc or pc >= 16]
+    clockwise = [pc for pc in clockwise if pc < n_pc]
     k = 0
     for p in plans:
         if p.offload:

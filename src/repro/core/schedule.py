@@ -138,8 +138,11 @@ class PipelinePlan:
         wpa = tuple(max(1, w // word_scale) for w in wpr)
         lat_cycles = max(1, int(hbm_model.read_latency_ns(self.burst, "avg")
                                 * hbm_model.FABRIC_MHZ / 1e3))
-        bm_depth = max(hbm_model.burst_matching_fifo_words(self.burst),
-                       self.burst)
+        # the per-layer credit pool is the burst-matching FIFO the
+        # schedules actually carry (identical to the §IV-A 2-burst sizing
+        # for compiler-built plans; the autotuner deepens it per plan),
+        # never smaller than one burst or the prefetcher could not issue
+        bm_depth = max(min(s.bm_fifo_words for s in streamed), self.burst)
         cfg = fifo_sim.SimConfig(
             n_layers=len(streamed),
             burst=self.burst,

@@ -1,0 +1,158 @@
+"""Regression tests for the placement-pass bugs the autotuner exposed.
+
+Three defects, each pinned failing-before / passing-after:
+
+  * ``hybrid_selection`` mutated its input plans in place (the
+    copy-then-reset was ``dataclasses.replace(p) if False else p`` — a
+    no-op), so any caller evaluating several candidate placements from
+    one base allocation had its base corrupted after the first call;
+  * ``assign_pseudo_channels`` filtered the clockwise walk with
+    ``pc < n_pc or pc >= 16``, which keeps the whole far stack
+    (PCs 16..31) regardless of ``n_pc`` — a target with 8 usable PCs
+    handed out ids up to 31;
+  * ``allocate_parallelism`` gave up the moment the *preferred*
+    doubling dimension overflowed the AI-TB budget, without trying the
+    other dimension (and computed a dead ``before`` snapshot while at
+    it).
+"""
+import dataclasses
+
+from repro.compiler.target import TPU_INTERPRET
+from repro.configs.cnn import get_cnn, mini_resnet18
+from repro.core import placement
+from repro.core.placement import LayerPlan
+
+
+def _base_plans():
+    cfg = mini_resnet18(hw=8, width=16, stages=4)
+    return placement.allocate_parallelism(cfg, TPU_INTERPRET.tb_budget)
+
+
+# ---------------------------------------------------------------------------
+# hybrid_selection must not mutate its input
+# ---------------------------------------------------------------------------
+
+
+class TestHybridSelectionPurity:
+    def test_inputs_unmodified(self):
+        plans = _base_plans()
+        snapshot = [dataclasses.replace(p) for p in plans]
+        out = placement.hybrid_selection(plans, bram_m20ks=1, n_pc=31)
+        # tight budget forces offloads in the OUTPUT...
+        assert any(p.offload for p in out)
+        # ...while the caller's plans stay byte-identical
+        assert plans == snapshot
+
+    def test_output_is_fresh_objects(self):
+        plans = _base_plans()
+        out = placement.hybrid_selection(plans, bram_m20ks=1, n_pc=31)
+        assert all(o is not p for o, p in zip(out, plans))
+
+    def test_repeated_calls_identical(self):
+        """The autotuner's usage pattern: many selections from one base.
+        Before the fix, call 1 left offload flags set, so call 2 (which
+        resets them on its *copies*) still worked — but the caller's
+        base was dirty and any direct use of it saw phantom offloads."""
+        plans = _base_plans()
+        first = placement.hybrid_selection(plans, bram_m20ks=1, n_pc=31)
+        assert not any(p.offload for p in plans)
+        second = placement.hybrid_selection(plans, bram_m20ks=1, n_pc=31)
+        assert [p.offload for p in first] == [p.offload for p in second]
+
+
+# ---------------------------------------------------------------------------
+# assign_pseudo_channels must respect n_pc
+# ---------------------------------------------------------------------------
+
+
+def _offloaded(n: int):
+    cfg = mini_resnet18(hw=8, width=16, stages=4)
+    plans = [LayerPlan(spec=l) for l in cfg.layers if not l.is_pool][:n]
+    assert len(plans) == n, "config too small for this test"
+    for p in plans:
+        p.offload = True
+    return plans
+
+
+class TestPseudoChannelBounds:
+    def test_n_pc_8_never_exceeds(self):
+        # 12 offloads over 8 usable PCs: must wrap within 0..7, never
+        # touch the far stack (the old filter handed out 31, 30, ...)
+        plans = _offloaded(12)
+        placement.assign_pseudo_channels(plans, n_pc=8)
+        pcs = [p.pc for p in plans]
+        assert all(pc is not None and 0 <= pc < 8 for pc in pcs)
+        assert pcs == [0, 1, 2, 3, 4, 5, 6, 7, 0, 1, 2, 3]
+
+    def test_n_pc_16_never_exceeds(self):
+        plans = _offloaded(20)
+        placement.assign_pseudo_channels(plans, n_pc=16)
+        assert all(0 <= p.pc < 16 for p in plans)
+
+    def test_full_device_order(self):
+        """At n_pc=31 (the paper device: one of 32 PCs fails timing
+        closure) the walk is 0->15 then the far stack high-to-low, and
+        id 31 itself — outside the usable range — is never handed out
+        (the old filter's ``pc >= 16`` arm kept the whole far stack)."""
+        plans = _offloaded(20)
+        placement.assign_pseudo_channels(plans, n_pc=31)
+        assert [p.pc for p in plans] == \
+            list(range(16)) + list(range(30, 26, -1))
+
+    def test_with_offload_respects_small_n_pc(self):
+        """End-to-end: a compiled plan on an 8-PC target variant, with a
+        forced offload set wider than the PC count, must keep every
+        assigned pseudo-channel inside the target's range."""
+        from repro.compiler import plan_pipeline
+        cfg = mini_resnet18(hw=8, width=16, stages=4)
+        plan = plan_pipeline(cfg, TPU_INTERPRET.replace(n_pc=8))
+        convs = [s.spec.name for s in plan.schedules
+                 if not s.spec.is_pool][:10]
+        forced = plan.with_offload(convs)
+        pcs = [s.pc for s in forced.streamed]
+        assert len(pcs) == 10
+        assert all(0 <= pc < 8 for pc in pcs)
+
+
+# ---------------------------------------------------------------------------
+# allocate_parallelism budget handling
+# ---------------------------------------------------------------------------
+
+
+class TestAllocateParallelism:
+    def test_budget_respected(self):
+        for budget in (50, 120, 500, 2000):
+            plans = placement.allocate_parallelism(
+                mini_resnet18(hw=8, width=16, stages=4), budget)
+            assert sum(p.tensor_blocks for p in plans) <= budget
+
+    def test_fills_budget_greedily(self):
+        """With the fallback, the allocator keeps doubling until NO
+        dimension of the bottleneck fits — the result must use more
+        than half the budget whenever any single doubling would fit
+        (each doubling costs exactly the layer's current TB count)."""
+        cfg = mini_resnet18(hw=8, width=16, stages=4)
+        budget = 500
+        plans = placement.allocate_parallelism(cfg, budget)
+        used = sum(p.tensor_blocks for p in plans)
+        bott = max((p for p in plans if not p.spec.is_pool),
+                   key=lambda p: p.cycles_per_image)
+        # the bottleneck is either maxed out in both dimensions or any
+        # further doubling (in either dimension) would blow the budget
+        s = bott.spec
+        ci_eff = (s.c_in if s.kind != "dwconv" else 1) * s.k_h * s.k_w
+        co_eff = s.c_out if s.kind != "dwconv" else s.c_in
+        can_double = (bott.p_i * 10 < ci_eff) or (bott.p_o * 2 <= co_eff)
+        if can_double:
+            assert used + bott.tensor_blocks > budget
+
+    def test_golden_placements_unchanged(self):
+        """The fallback is behavior-neutral on the golden configs (both
+        dimensions cost the same TBs, so whichever doubles, the budget
+        check is identical): resnet50 @ NX2100 keeps its pinned
+        placement table."""
+        from repro.compiler import NX2100
+        plans = placement.allocate_parallelism(
+            get_cnn("resnet50"), NX2100.tb_budget)
+        assert sum(p.tensor_blocks for p in plans) <= NX2100.tb_budget
+        assert all(p.p_i >= 1 and p.p_o >= 1 for p in plans)
