@@ -1,10 +1,11 @@
 """Benchmark regression gate: diff two benchmark JSON artifacts.
 
-Works over all three artifact families (``BENCH_pipeline.json`` from
+Works over all four artifact families (``BENCH_pipeline.json`` from
 pipeline_throughput.py, ``BENCH_serving.json`` from
 serving_throughput.py, ``BENCH_autotune.json`` from
-autotune_placement.py): rows are matched on ``name`` and only the gated
-metrics *present in a row* are compared, so one gate serves all.
+autotune_placement.py, ``BENCH_sharded.json`` from sharded_serving.py):
+rows are matched on ``name`` and only the gated metrics *present in a
+row* are compared, so one gate serves all.
 
   * ``model_images_per_s``     may not DROP by more than the threshold
                                (deterministic §VI model output);
@@ -19,6 +20,12 @@ metrics *present in a row* are compared, so one gate serves all.
                                machine, so host noise largely cancels;
                                the noise-robust half of the serving
                                gate);
+  * ``sharded_images_per_s`` /
+    ``scaling_efficiency``     may not DROP (sharded-serving rows: the
+                               cycle model under the M/(M+S-1) fill law
+                               over the partitioned graph —
+                               deterministic compiler outputs, same
+                               family as ``model_images_per_s``);
   * ``tuned_stall_cycles`` /
     ``tuned_m20ks``            may not GROW, and
   * ``tuned_images_per_s``     may not DROP (autotune rows: fixed-seed
@@ -60,6 +67,11 @@ GATED_METRICS = {
                                           # nodes included, 0 words each)
     "serving_images_per_s": "down",
     "serving_speedup_x": "down",
+    # sharded_serving.py rows (deterministic cycle model + fill law over
+    # the partitioned graph; topology_nodes resets the baseline on
+    # deliberate graph changes, same as pipeline rows)
+    "sharded_images_per_s": "down",
+    "scaling_efficiency": "down",
     # autotune_placement.py rows (deterministic search + sim outputs):
     # the co-optimizer may never get worse at finding plans
     "tuned_stall_cycles": "up",

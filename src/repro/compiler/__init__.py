@@ -18,6 +18,14 @@ Public API:
     ``backend="eager"`` per-layer walk), plus ``stats_template()`` /
     ``eq2_report().verify()`` — the hard-fail plan-vs-dispatch Eq. 2
     cross-check over 100% of the topology, execution-free;
+  * :func:`partition_pipeline` / :class:`StagePartition` — the sharding
+    stage (``CompiledPipeline.partition(n_stages)``): the placed
+    schedule cut into contiguous device-local stage programs, balanced
+    by the per-layer cycle model with fused residual blocks atomic,
+    carrying per-stage Eq. 2 accounting and the per-stage hard-fail
+    ``verify_eq2()`` cross-check; ``serve_sharded(params, mesh=...)``
+    runs the partition as a mesh pipeline (one stage per device over
+    ``lax.ppermute``, shard-local producers, shared §V-A credits);
   * :func:`autotune_plan` / :class:`AutotuneConfig` — the search-based
     placement + FIFO co-optimizer (``compile(cfg, target,
     autotune=...)`` is the integrated path): joint exploration of the
@@ -40,6 +48,9 @@ from repro.compiler.engines import (EngineContext, LayerEngine,  # noqa: F401
                                     register_engine, registered_engines,
                                     select_block_engine, select_engine,
                                     unregister_engine)
+from repro.compiler.partition import (PartitionError,  # noqa: F401
+                                      StagePartition, StageProgram,
+                                      partition_pipeline, stage_forward_fns)
 from repro.compiler.pipeline import (BlockAssignment,  # noqa: F401
                                      CompileError, CompiledPipeline,
                                      EngineAssignment, Eq2MismatchError,

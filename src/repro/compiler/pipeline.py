@@ -323,6 +323,32 @@ class CompiledPipeline:
         return CnnServingEngine(self, params, microbatch=microbatch,
                                 credits=credits, **kw)
 
+    # -- multi-device sharding ----------------------------------------------
+
+    def partition(self, n_stages: int) -> "StagePartition":
+        """Cut the placed schedule into ``n_stages`` device-local stage
+        programs, balanced by the per-layer cycle model with fused
+        residual blocks atomic (:mod:`repro.compiler.partition`).  The
+        result carries per-stage Eq. 2 accounting and
+        ``verify_eq2()`` — the same hard-fail plan-vs-dispatch
+        cross-check, per stage."""
+        from repro.compiler.partition import partition_pipeline
+        return partition_pipeline(self, n_stages)
+
+    def serve_sharded(self, params, *, mesh, axis: str = "model",
+                      microbatch: int = 4, **kw):
+        """Mesh-pipelined serving: stages span the ``axis`` devices of
+        ``mesh`` (one stage per device, activations hopping stages via
+        ``lax.ppermute``), each stage dispatching its slice of the
+        compiled engine table, with shard-local producer queues and the
+        shared §V-A :class:`~repro.core.admission.AdmissionController`
+        bounding cross-device in-flight microbatches.  Returns a
+        :class:`~repro.runtime.sharded_serving.ShardedCnnServingEngine`
+        (context manager, like :meth:`serve`)."""
+        from repro.runtime.sharded_serving import ShardedCnnServingEngine
+        return ShardedCnnServingEngine(self, params, mesh=mesh, axis=axis,
+                                       microbatch=microbatch, **kw)
+
     # -- stage 6: the fused whole-pipeline trace ----------------------------
     # _fused_cache: (shape, dtype, interpret, act_scale) -> FusedTrace,
     # created in __post_init__ so it lives with the pipeline and every

@@ -485,6 +485,49 @@ def mini_resnet50(hw: int = 32, width: int = 16,
     return CNNConfig("resnet50-mini", tuple(layers), num_classes=10)
 
 
+def mini_mobilenet(hw: int = 8, width: int = 16,
+                   blocks: int = 4) -> CNNConfig:
+    """MobileNetV1-topology network at executable scale — the config
+    that runs ``dwconv_int8`` end to end (compile / run / golden
+    placement) in interpret mode.  Structure mirrors
+    ``_mobilenet_v1()``: a 3x3 stem (stride 1 at mini scale), then
+    ``blocks`` depthwise-separable pairs (``dw{i}`` 3x3 dwconv +
+    ``pw{i}`` 1x1 pwconv), stride-2 on every odd-indexed pair with the
+    channel count doubling there, then GAP (when the final map is still
+    spatial) and an fc head.  No residual adds, so
+    ``residual_blocks()`` returns () and every stage cut is legal — the
+    partition balancer's no-atomic-units case.
+    """
+    if blocks < 1:
+        raise ValueError("mini_mobilenet needs at least one dw/pw pair")
+    layers: List[ConvLayerSpec] = []
+    layers.append(ConvLayerSpec("stem", "conv", 3, 3, 3, width, 1, hw, hw))
+    h = w = hw
+    c_in = width
+    for i in range(blocks):
+        stride = 2 if i % 2 == 1 else 1
+        c_out = c_in * 2 if stride == 2 else c_in
+        if stride == 2:
+            if (h > 1 and h % 2) or (w > 1 and w % 2):
+                # same even-map rule as the mini resnets: a floor-halved
+                # odd map would diverge from the kernels' SAME output
+                raise ValueError(
+                    f"mini_mobilenet: stride-2 pair dw{i} on an odd "
+                    f"{h}x{w} map; pick hw so maps stay even (or 1) "
+                    f"through all {blocks} pairs")
+        layers.append(ConvLayerSpec(
+            f"dw{i}", "dwconv", 3, 3, c_in, c_in, stride, h, w))
+        if stride == 2:
+            h, w = max(1, h // 2), max(1, w // 2)
+        layers.append(ConvLayerSpec(
+            f"pw{i}", "pwconv", 1, 1, c_in, c_out, 1, h, w))
+        c_in = c_out
+    if h > 1 or w > 1:
+        layers.append(_gap(c_in, h, w))
+    layers.append(ConvLayerSpec("fc", "fc", 1, 1, c_in, 10, 1, 1, 1))
+    return CNNConfig("mobilenet-mini", tuple(layers), num_classes=10)
+
+
 CNN_CONFIGS = {
     "resnet18": _resnet(18),
     "resnet50": _resnet(50),

@@ -240,3 +240,92 @@ def replay_schedule(n_items: int, *, capacity: int,
     if controller is None:
         ctl.assert_quiescent()
     return trace
+
+
+# ---------------------------------------------------------------------------
+# the admission law over a STAGED topology (the sharded mesh pipeline)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StagedTrace:
+    """What the staged replay did: :class:`AdmissionTrace` aggregates
+    plus the per-stage occupancy proof for the S-stage ring."""
+
+    n_stages: int
+    capacity: int
+    admit_ticks: List[int] = field(default_factory=list)
+    complete_ticks: List[int] = field(default_factory=list)
+    makespan: int = 0
+    max_in_flight: int = 0
+    idle_ticks: int = 0
+    #: max simultaneous microbatches observed on any single stage — the
+    #: staged law says a stage holds at most ONE per tick (checked,
+    #: not assumed)
+    max_stage_occupancy: int = 0
+
+
+def replay_staged_schedule(n_items: int, *, n_stages: int,
+                           capacity: Optional[int] = None,
+                           controller: Optional[AdmissionController] = None
+                           ) -> StagedTrace:
+    """Drive the (unchanged) :class:`AdmissionController` through the
+    STAGED static schedule of ``core/dataflow.py``'s mesh pipeline: one
+    admission per tick when a credit is free, the admitted microbatch
+    hopping one stage per tick (stage ``s`` at tick ``a + s``) and
+    returning its credit after the last stage, at tick
+    ``a + n_stages - 1`` — ``staged_pipeline_apply``'s schedule, and
+    :func:`replay_schedule` at ``latency_ticks = n_stages - 1``.
+
+    Beyond the flat replay this checks the law the split topology adds:
+    every stage of the ring holds at most ONE microbatch per tick
+    (computed from the admission ticks, raising
+    :class:`AdmissionError` on violation), so a ``capacity >= n_stages``
+    bound admits back-to-back with makespan ``M + S - 1``
+    (``pipeline_stats``'s tick count) and a tighter bound only ever
+    STALLS admission — it can never overrun a stage.
+    """
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    capacity = n_stages if capacity is None else capacity
+    ctl = controller if controller is not None \
+        else AdmissionController(capacity, name="staged-replay")
+    if ctl.capacity != capacity:
+        raise ValueError(f"controller capacity {ctl.capacity} != {capacity}")
+    if ctl.closed or ctl.free_credits < capacity:
+        raise ValueError(
+            f"controller must be open and idle to replay the schedule "
+            f"(closed={ctl.closed}, {ctl.free_credits}/{capacity} free)")
+    trace = StagedTrace(n_stages=n_stages, capacity=capacity)
+    live: List[int] = []              # admit ticks of in-flight items
+    pending = n_items
+    tick = 0
+    while len(trace.complete_ticks) < n_items:
+        tick += 1
+        if pending and ctl.try_acquire():
+            pending -= 1
+            trace.admit_ticks.append(tick)
+            live.append(tick)
+        trace.max_in_flight = max(trace.max_in_flight, ctl.in_flight)
+        # ring occupancy this tick: item admitted at a sits on stage
+        # tick - a while 0 <= tick - a < S
+        stages = [tick - a for a in live if 0 <= tick - a < n_stages]
+        occupancy = max((stages.count(s) for s in set(stages)), default=0)
+        trace.max_stage_occupancy = max(trace.max_stage_occupancy,
+                                        occupancy)
+        if occupancy > 1:
+            raise AdmissionError(
+                f"staged replay: a stage held {occupancy} microbatches "
+                f"at tick {tick} — the static schedule was violated")
+        done = [a for a in live if tick - a == n_stages - 1]
+        if done:
+            live = [a for a in live if tick - a != n_stages - 1]
+            ctl.release(len(done))
+            trace.complete_ticks.extend([tick] * len(done))
+        else:
+            trace.idle_ticks += 1
+        ctl.check_invariants()
+    trace.makespan = tick
+    if controller is None:
+        ctl.assert_quiescent()
+    return trace

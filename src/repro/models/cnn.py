@@ -121,7 +121,8 @@ BlockEngineHook = Callable[[ResBlockSpec, Params, jnp.ndarray],
 
 def cnn_forward(params: Params, cfg: CNNConfig, images,
                 engine: Optional[EngineHook] = None,
-                block_engine: Optional[BlockEngineHook] = None
+                block_engine: Optional[BlockEngineHook] = None,
+                layer_range: Optional[Tuple[int, int]] = None
                 ) -> jnp.ndarray:
     """Plain feed-forward execution (the functional reference; the pipeline
     executor in runtime/pipeline.py runs the same layers through the Pallas
@@ -146,6 +147,15 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
     ``block_engine``: block-granular hook, offered each residual block
     BEFORE its layers run individually; declining falls back to the
     per-layer wiring here (which itself offers each layer to ``engine``).
+
+    ``layer_range``: ``(start, stop)`` indices into ``cfg.layers`` — run
+    only that contiguous slice (the sharded pipeline executor walks one
+    stage's slice per device).  ``images`` is then the slice's input
+    activation; when the slice stops before the final layer the return
+    value is the int8 activation feeding layer ``stop`` (the stage
+    boundary), not logits.  A range may not start or stop inside a
+    residual block: the identity add spans the whole block, so a cut
+    there would silently drop the skip connection.
     """
 
     def apply_layer(spec: ConvLayerSpec, x, relu: bool = True):
@@ -160,8 +170,22 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
     x = images
     layers = list(cfg.layers)
     blocks = {b.convs[0].name: b for b in residual_blocks(cfg)}
-    i = 0
-    while i < len(layers):
+    start, stop = (0, len(layers)) if layer_range is None else layer_range
+    if not 0 <= start < stop <= len(layers):
+        raise ValueError(
+            f"layer_range {layer_range} outside [0, {len(layers)})")
+    member_head = {m.name: b.convs[0].name
+                   for b in residual_blocks(cfg) for m in b.members}
+    for cut, where in ((start, "start"), (stop, "stop")):
+        if cut < len(layers):
+            name = layers[cut].name
+            if name in member_head and member_head[name] != name:
+                raise ValueError(
+                    f"layer_range {where}={cut} cuts residual block "
+                    f"{member_head[name]!r} open at member {name!r}; "
+                    f"stage cuts must treat blocks as atomic units")
+    i = start
+    while i < stop:
         spec = layers[i]
         name = spec.name
         if spec.is_pool:
@@ -199,6 +223,8 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
             continue
         x, _ = apply_layer(spec, x)
         i += 1
+    if stop < len(layers):
+        return x                  # int8 stage-boundary activation
     # no explicit fc tail (shouldn't happen) — pool and return
     return jnp.mean(x.astype(jnp.float32), axis=(1, 2))
 

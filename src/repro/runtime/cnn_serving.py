@@ -52,7 +52,8 @@ from repro.core.admission import AdmissionController, AdmissionError
 from repro.kernels.pallas_compat import resolve_interpret
 from repro.models.cnn import cnn_input_shape
 
-__all__ = ["CnnRequest", "CnnServingEngine", "ServingReport"]
+__all__ = ["CnnRequest", "CnnServingEngine", "MicrobatchPacker",
+           "ServingReport"]
 
 _STOP = object()                      # request-queue shutdown sentinel
 
@@ -115,6 +116,65 @@ class CnnRequest:
     def _fail(self, exc: BaseException) -> None:
         self._error = exc
         self._event.set()
+
+
+class MicrobatchPacker:
+    """Greedy pad+mask packing over one bounded request queue: fill a
+    fixed ``microbatch`` shape from whatever rows are available, rows
+    spanning microbatch boundaries via the (request, offset) cursor,
+    never waiting for more once at least one row is held (latency over
+    occupancy — the padding keeps partial batches exact, just less
+    dense).  Owned by ONE consumer thread; shared by the host-queue
+    engine here and the shard-local producers of
+    :class:`~repro.runtime.sharded_serving.ShardedCnnServingEngine`
+    (one packer per shard queue there).
+    """
+
+    def __init__(self, request_queue: "queue.Queue", microbatch: int):
+        self.queue = request_queue
+        self.microbatch = microbatch
+        self.cursor: Optional[List[Any]] = None      # [request, row_offset]
+        self.saw_stop = False
+
+    def collect(self, *, block: bool = True):
+        """One packed microbatch: ``(rows, filled)`` with ``rows`` a
+        list of ``(request, req_offset, mb_offset, take)`` spans, or
+        ``None`` when nothing is available (queue empty and
+        ``block=False``, or the stop sentinel was drained)."""
+        rows: List[Tuple[CnnRequest, int, int, int]] = []
+        filled = 0
+        while filled < self.microbatch:
+            if self.cursor is None:
+                if self.saw_stop:
+                    break
+                try:
+                    item = self.queue.get(block=block and filled == 0)
+                except queue.Empty:
+                    break
+                if item is _STOP:
+                    self.saw_stop = True
+                    break
+                self.cursor = [item, 0]
+            req, off = self.cursor
+            take = min(req.n - off, self.microbatch - filled)
+            rows.append((req, off, filled, take))
+            filled += take
+            self.cursor = [req, off + take] if off + take < req.n else None
+        if filled == 0:
+            return None                              # stopped and empty
+        return rows, filled
+
+    @property
+    def depth_hint(self) -> int:
+        """Approximate queued depth (requests + the partially consumed
+        cursor) for the report's queue-depth samples."""
+        return self.queue.qsize() + (1 if self.cursor else 0)
+
+    def fail_cursor(self, exc: BaseException) -> None:
+        """Fail the partially consumed request, if any."""
+        if self.cursor is not None:
+            self.cursor[0]._fail(exc)
+            self.cursor = None
 
 
 @dataclass
@@ -205,8 +265,7 @@ class CnnServingEngine:
         self.words_per_image = sum(
             compiled.plan.hbm_words_per_image().values())
         self._trace = None
-        self._cursor: Optional[List[Any]] = None     # [request, row_offset]
-        self._saw_stop = False
+        self._packer = MicrobatchPacker(self._queue, microbatch)
         self._threads: List[threading.Thread] = []
         self._started = False
         self._stopped = False
@@ -403,32 +462,9 @@ class CnnServingEngine:
             self._inflight.put(None)                 # completer sentinel
 
     def _collect_pack(self):
-        """Pack queued request rows into one microbatch: fill greedily
-        from whatever is immediately available, but never wait for more
-        once at least one row is held (latency over occupancy — the
-        mask/padding makes partial batches exact, just less dense)."""
-        rows: List[Tuple[CnnRequest, int, int, int]] = []
-        filled = 0
-        while filled < self.microbatch:
-            if self._cursor is None:
-                if self._saw_stop:
-                    break
-                try:
-                    item = self._queue.get(block=filled == 0)
-                except queue.Empty:
-                    break
-                if item is _STOP:
-                    self._saw_stop = True
-                    break
-                self._cursor = [item, 0]
-            req, off = self._cursor
-            take = min(req.n - off, self.microbatch - filled)
-            rows.append((req, off, filled, take))
-            filled += take
-            self._cursor = [req, off + take] if off + take < req.n else None
-        if filled == 0:
-            return None                              # stopped and empty
-        return rows, filled
+        """One packed microbatch off the host queue (the shared
+        :class:`MicrobatchPacker` greedy pad+mask policy)."""
+        return self._packer.collect()
 
     def _dispatch(self, rows, filled: int) -> None:
         buf = np.zeros(self._in_shape, np.int8)      # padded fixed shape
@@ -443,7 +479,7 @@ class CnnServingEngine:
         with self._lock:
             self._mb_count += 1
             self._padded_rows += self.microbatch - filled
-            depth = self._queue.qsize() + (1 if self._cursor else 0)
+            depth = self._packer.depth_hint
             self._depth_samples.append(
                 (t - self._t0 if self._t0 else 0.0, depth))
         self._inflight.put((logits, rows))
@@ -495,9 +531,7 @@ class CnnServingEngine:
             self._lock.notify_all()
         self.admission.close()
         self._sweep_queues(exc)
-        if self._cursor is not None:
-            self._cursor[0]._fail(exc)
-            self._cursor = None
+        self._packer.fail_cursor(exc)
 
     def _sweep_queues(self, exc: BaseException) -> None:
         """Fail everything sitting in the queues.  Safe to call from any

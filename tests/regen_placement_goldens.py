@@ -11,9 +11,15 @@ Prints, per paper network at the NX2100 defaults:
   * the offloaded set as (layer, pc, p_i, p_o) in pipeline order,
   * the fused-block golden: (n_blocks, bottleneck count, total plan-side
     Eq. 2 words over all block units).
+
+With ``--mini``, instead prints the MOBILENET_MINI_GOLDEN literal for
+tests/test_mini_mobilenet.py (the mini depthwise net at the
+TPU_INTERPRET budgets).
 """
+import sys
+
 from repro import compiler
-from repro.compiler import NX2100
+from repro.compiler import NX2100, TPU_INTERPRET
 from repro.configs import CNN_CONFIGS
 
 NETS = ("resnet18", "resnet50", "vgg16")
@@ -35,6 +41,17 @@ def golden_blocks(name):
     return len(cp.block_assignments), bottlenecks, words
 
 
+def main_mini():
+    from repro.configs.cnn import mini_mobilenet
+    golden_cfg = dict(hw=16, width=32, blocks=6)    # = GOLDEN_CFG in the test
+    cp = compiler.compile(mini_mobilenet(**golden_cfg), TPU_INTERPRET)
+    print(f"# at GOLDEN_CFG = {golden_cfg!r}, TPU_INTERPRET budgets")
+    print(f"MOBILENET_MINI_GOLDEN = ({len(cp.schedules)}, [")
+    for s in cp.plan.streamed:
+        print(f"    {(s.spec.name, s.pc, s.p_i, s.p_o)!r},")
+    print("])")
+
+
 def main():
     print("GOLDEN = {")
     for name in NETS:
@@ -53,4 +70,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main_mini() if "--mini" in sys.argv[1:] else main()

@@ -26,7 +26,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import fifo_sim
 from repro.core.admission import (AdmissionController, AdmissionError,
-                                  replay_schedule)
+                                  replay_schedule,
+                                  replay_staged_schedule)
 from repro.core.dataflow import pipeline_stats
 
 
@@ -171,3 +172,44 @@ def test_replay_matches_dataflow_static_schedule(stages, microbatches):
     # admissions are back to back: the static schedule never stalls the
     # admission port when credits cover the pipeline depth
     assert trace.admit_ticks == list(range(1, microbatches + 1))
+
+
+@settings(max_examples=30, deadline=None)
+@given(stages=st.integers(1, 6), microbatches=st.integers(1, 24),
+       extra=st.integers(0, 4))
+def test_staged_replay_matches_flat_replay(stages, microbatches, extra):
+    """The staged replay (per-stage occupancy checked, not assumed) is
+    the flat replay at latency S-1: same makespan, same admissions —
+    and no stage ever held two microbatches, for any capacity >= S."""
+    capacity = stages + extra
+    staged = replay_staged_schedule(microbatches, n_stages=stages,
+                                    capacity=capacity)
+    flat = replay_schedule(microbatches, capacity=capacity,
+                           latency_ticks=stages - 1)
+    assert staged.makespan == flat.makespan
+    assert staged.admit_ticks == flat.admit_ticks
+    assert staged.complete_ticks == flat.complete_ticks
+    assert staged.max_stage_occupancy <= 1
+    assert staged.max_in_flight <= capacity
+
+
+def test_staged_replay_tight_credits_stall_not_overrun():
+    """capacity < S stalls admission (longer makespan) but still never
+    puts two microbatches on one stage."""
+    S, M = 5, 12
+    tight = replay_staged_schedule(M, n_stages=S, capacity=2)
+    full = replay_staged_schedule(M, n_stages=S)
+    assert tight.max_stage_occupancy <= 1
+    assert tight.max_in_flight <= 2
+    assert tight.makespan > full.makespan == M + S - 1
+
+
+def test_staged_replay_through_caller_controller():
+    ctl = AdmissionController(4)
+    trace = replay_staged_schedule(9, n_stages=4, capacity=4,
+                                   controller=ctl)
+    assert ctl.admitted_total == ctl.completed_total == 9
+    assert trace.makespan == 9 + 4 - 1
+    ctl.assert_quiescent()
+    with pytest.raises(ValueError, match="n_stages"):
+        replay_staged_schedule(1, n_stages=0)

@@ -1,0 +1,98 @@
+"""mini_mobilenet: end-to-end coverage for the depthwise topology.
+
+The mini resnets exercise conv/pwconv/res_block engines end to end;
+this config does the same for ``dwconv_int8`` — compile binds it, the
+fused and eager backends run it bit-identically against the pure-JAX
+reference, Algorithm 1 placement over the dw/pw alternation is pinned
+by golden, and the Eq. 2 cross-check holds.  Regenerate the golden with
+
+    PYTHONPATH=src python tests/regen_placement_goldens.py --mini
+
+after a deliberate planner change (the script prints this literal too).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compiler
+from repro.compiler import TPU_INTERPRET
+from repro.configs.cnn import mini_mobilenet, residual_blocks
+from repro.models.cnn import cnn_forward, cnn_input_shape, init_cnn_params
+
+# the golden config: big enough that Algorithm 1 genuinely offloads
+# (three streamed pwconvs), small enough for interpret mode
+GOLDEN_CFG = dict(hw=16, width=32, blocks=6)
+# (n_nodes, [(layer, pc, p_i, p_o), ...]) at the TPU_INTERPRET budgets
+MOBILENET_MINI_GOLDEN = (15, [
+    ("pw3", 0, 4, 4),
+    ("pw4", 1, 8, 4),
+    ("pw5", 2, 4, 8),
+])
+
+RUN_CFG = mini_mobilenet(hw=8, width=16, blocks=4)   # executable scale
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cp = compiler.compile(RUN_CFG, TPU_INTERPRET)
+    params = init_cnn_params(jax.random.PRNGKey(0), RUN_CFG)
+    return cp, params
+
+
+def test_builder_validation():
+    with pytest.raises(ValueError, match="odd"):
+        mini_mobilenet(hw=6, width=16, blocks=4)     # 3x3 map at dw3
+    with pytest.raises(ValueError, match="at least one"):
+        mini_mobilenet(blocks=0)
+
+
+def test_no_residual_structure():
+    """MobileNet has no identity adds: no blocks to fuse, every
+    partition cut is legal."""
+    cfg = mini_mobilenet(**GOLDEN_CFG)
+    assert residual_blocks(cfg) == ()
+    assert cfg.name == "mobilenet-mini"
+    assert cfg.num_classes == 10
+
+
+def test_compile_binds_dwconv_engine(setup):
+    cp, _ = setup
+    table = cp.engine_table()
+    dw = [l.name for l in RUN_CFG.layers if l.kind == "dwconv"]
+    assert dw
+    for name in dw:
+        assert table[name] == "dwconv_int8"
+    assert "jnp_ref" not in set(table.values())
+    assert cp.block_assignments == ()                # nothing to fuse
+
+
+def test_golden_placement():
+    n_nodes, offloaded = MOBILENET_MINI_GOLDEN
+    cp = compiler.compile(mini_mobilenet(**GOLDEN_CFG), TPU_INTERPRET)
+    assert len(cp.schedules) == n_nodes
+    got = [(s.spec.name, s.pc, s.p_i, s.p_o) for s in cp.plan.streamed]
+    assert got == offloaded
+    assert cp.replaced == ()
+
+
+def test_fused_eager_reference_identical(setup):
+    cp, params = setup
+    rng = np.random.default_rng(0)
+    x = rng.integers(-8, 8, size=cnn_input_shape(RUN_CFG, 2),
+                     dtype=np.int8)
+    yf, repf = cp.run(params, jnp.asarray(x))
+    ye, repe = cp.run(params, jnp.asarray(x), backend="eager")
+    yr = cnn_forward(params, RUN_CFG, jnp.asarray(x))
+    assert np.array_equal(np.asarray(yf), np.asarray(ye))
+    assert np.array_equal(np.asarray(yf), np.asarray(yr))
+    repf.verify()
+    repe.verify()
+
+
+def test_eq2_report_verifies(setup):
+    cp, _ = setup
+    cp.eq2_report(batch=2).verify()
+    # and per-stage when partitioned (no atomic units: any cut count
+    # up to the node count is legal)
+    cp.partition(3).verify_eq2(batch=2)

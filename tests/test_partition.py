@@ -1,0 +1,177 @@
+"""Pipeline partitioning: the compiler's sharding stage.
+
+Contract under test (compiler/partition.py + models/cnn.py layer_range):
+
+  * stage programs tile the placed layer order exactly — contiguous,
+    disjoint, covering [0, L) in order;
+  * residual blocks are ATOMIC — no stage cut falls inside a block (the
+    identity add in ``cnn_forward`` spans the whole block, fused or
+    not), and ``cnn_forward`` itself rejects a mid-block ``layer_range``;
+  * the balancer is EXACT — the linear-partition DP achieves the
+    minimum possible max-stage cost over all contiguous unit cuts
+    (checked against brute force);
+  * per-stage Eq. 2 accounting conserves the whole-plan words and every
+    stage's ExecutionReport hard-fail ``verify()`` passes
+    (``verify_eq2``);
+  * composing the stage forward functions sequentially is bit-identical
+    to the unpartitioned fused run — partitioning changes scheduling,
+    never an output bit.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compiler
+from repro.compiler import TPU_INTERPRET, PartitionError, partition_pipeline
+from repro.compiler.partition import _linear_partition, stage_forward_fns
+from repro.configs.cnn import (mini_mobilenet, mini_resnet18, mini_resnet50,
+                               residual_blocks)
+from repro.models.cnn import cnn_forward, cnn_input_shape, init_cnn_params
+
+MINI = mini_resnet18(hw=8, width=16, stages=4)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cp = compiler.compile(MINI, TPU_INTERPRET)
+    params = init_cnn_params(jax.random.PRNGKey(0), MINI)
+    return cp, params
+
+
+# -- cut structure -----------------------------------------------------------
+
+
+def test_stages_tile_layer_order(setup):
+    cp, _ = setup
+    L = len(cp.plan.schedules)
+    for n in (1, 2, 3, 4):
+        part = cp.partition(n)
+        assert part.n_stages == n
+        ranges = [sp.layer_range for sp in part.stages]
+        assert ranges[0][0] == 0 and ranges[-1][1] == L
+        for (_, stop), (start, _) in zip(ranges, ranges[1:]):
+            assert stop == start                    # contiguous, disjoint
+        assert all(stop > start for start, stop in ranges)
+
+
+def test_blocks_are_atomic(setup):
+    cp, _ = setup
+    blocks = residual_blocks(cp.plan.cfg)
+    assert blocks                                   # resnet: non-trivial
+    for n in (2, 3, 4):
+        part = cp.partition(n)
+        for b in blocks:
+            owners = {s.stage for s in part.stages
+                      if any(m.name in s.layers for m in b.members)}
+            assert len(owners) == 1, \
+                f"block {b.name} split across stages {owners}"
+
+
+def test_partition_argument_validation(setup):
+    cp, _ = setup
+    with pytest.raises(PartitionError, match=">= 1"):
+        cp.partition(0)
+    units = len(residual_blocks(cp.plan.cfg)) + sum(
+        1 for s in cp.plan.schedules
+        if not any(s.spec.name in {m.name for m in b.members}
+                   for b in residual_blocks(cp.plan.cfg)))
+    with pytest.raises(PartitionError, match="atomic unit"):
+        cp.partition(units + 1)
+    assert partition_pipeline(cp, 2).n_stages == 2  # functional form too
+
+
+def test_linear_partition_dp_is_optimal():
+    """The DP's max-stage cost equals brute force over every contiguous
+    cut, for a sweep of random cost vectors."""
+    rng = np.random.default_rng(0)
+    for trial in range(25):
+        n = int(rng.integers(2, 9))
+        k = int(rng.integers(1, n + 1))
+        costs = [int(c) for c in rng.integers(1, 100, size=n)]
+        cuts = _linear_partition(costs, k)
+        got = max(sum(costs[a:b]) for a, b in cuts)
+        best = min(
+            max(sum(costs[a:b]) for a, b in
+                zip((0,) + combo, combo + (n,)))
+            for combo in itertools.combinations(range(1, n), k - 1))
+        assert got == best, (costs, k, cuts)
+
+
+# -- Eq. 2 accounting --------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg_fn", [
+    lambda: mini_resnet18(hw=8, width=16, stages=4),
+    lambda: mini_resnet50(hw=8, width=16, stages=4),
+    lambda: mini_mobilenet(hw=8, width=16, blocks=4),
+])
+def test_verify_eq2_per_stage(cfg_fn):
+    """Splitting the graph never loosens the plan-vs-dispatch check:
+    every stage report verifies, and the per-stage words sum to the
+    whole plan's total."""
+    cp = compiler.compile(cfg_fn(), TPU_INTERPRET)
+    total = sum(cp.plan.hbm_words_per_image().values())
+    for n in (1, 2, 4):
+        part = cp.partition(n)
+        reports = part.verify_eq2(batch=2)
+        assert len(reports) == n
+        assert sum(sp.hbm_words_per_image for sp in part.stages) == total
+
+
+def test_single_stage_is_whole_plan(setup):
+    cp, _ = setup
+    part = cp.partition(1)
+    assert part.total_cycles == part.max_stage_cycles
+    assert part.balance == 1.0
+    assert part.stages[0].layer_range == (0, len(cp.plan.schedules))
+
+
+def test_modelled_throughput_shape(setup):
+    cp, _ = setup
+    part = cp.partition(4)
+    tp = part.modelled_throughput(32)
+    # the fill law applied to the cycle model: speedup = (total / max)
+    # discounted by M / (M + S - 1)
+    want = (part.total_cycles / part.max_stage_cycles) * 32 / (32 + 3)
+    assert tp["sharded_speedup_x"] == pytest.approx(want)
+    assert tp["scaling_efficiency"] == pytest.approx(want / 4)
+    assert tp["sharded_images_per_s"] > tp["one_stage_images_per_s"]
+
+
+# -- forward semantics -------------------------------------------------------
+
+
+def test_cnn_forward_rejects_mid_block_range(setup):
+    cp, params = setup
+    cfg = cp.plan.cfg
+    blocks = residual_blocks(cfg)
+    names = [l.name for l in cfg.layers]
+    # index INSIDE the first block (after its first member)
+    inside = names.index(blocks[0].members[0].name) + 1
+    x = jnp.zeros(cnn_input_shape(cfg, 1), jnp.int8)
+    with pytest.raises(ValueError, match="atomic"):
+        cnn_forward(params, cfg, x, layer_range=(0, inside))
+    with pytest.raises(ValueError, match="atomic"):
+        cnn_forward(params, cfg, x, layer_range=(inside, len(names)))
+    with pytest.raises(ValueError, match="layer_range"):
+        cnn_forward(params, cfg, x, layer_range=(3, 2))
+
+
+def test_stage_forwards_compose_to_fused_run(setup):
+    """Chaining the per-stage forward functions sequentially (no mesh)
+    reproduces the unpartitioned fused run bit-for-bit."""
+    cp, params = setup
+    rng = np.random.default_rng(3)
+    x = rng.integers(-8, 8, size=cnn_input_shape(cp.plan.cfg, 2),
+                     dtype=np.int8)
+    ref, _ = cp.run(params, jnp.asarray(x))
+    for n in (2, 4):
+        part = cp.partition(n)
+        fns = stage_forward_fns(part, interpret=True)
+        y = jnp.asarray(x)
+        for fn in fns:
+            y = fn(params, y)
+        assert np.array_equal(np.asarray(y), np.asarray(ref))
