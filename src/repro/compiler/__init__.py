@@ -47,6 +47,7 @@ from repro.compiler.engines import (EngineContext, LayerEngine,  # noqa: F401
                                     LayerExecStats, get_engine,
                                     register_engine, registered_engines,
                                     select_block_engine, select_engine,
+                                    select_scan_engine, select_stem_engine,
                                     unregister_engine)
 from repro.compiler.partition import (PartitionError,  # noqa: F401
                                       StagePartition, StageProgram,
@@ -55,9 +56,11 @@ from repro.compiler.pipeline import (BlockAssignment,  # noqa: F401
                                      CompileError, CompiledPipeline,
                                      EngineAssignment, Eq2MismatchError,
                                      ExecutionReport, FusedTrace,
-                                     TargetBudgetError, compile, finalize,
+                                     ScanGroupAssignment,
+                                     TargetBudgetError, compile,
+                                     count_jaxpr_eqns, finalize,
                                      make_dispatchers, plan_pipeline,
-                                     trace_fused)
+                                     trace_fused, trace_fused_abstract)
 from repro.compiler.target import (DEFAULT_VMEM_BYTES, NX2100,  # noqa: F401
                                    PRESETS, TPU_INTERPRET, Target,
                                    get_target)

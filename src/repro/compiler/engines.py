@@ -63,12 +63,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Protocol, Tuple, runtime_checkable
+from typing import (Any, Dict, List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.cnn import POOL_KINDS, ConvLayerSpec, ResBlockSpec
+from repro.configs.cnn import (POOL_KINDS, ConvLayerSpec, ResBlockSpec,
+                               StemUnitSpec)
 from repro.core.schedule import HBM, PINNED, LayerSchedule
 from repro.kernels.conv2d_int8.ops import conv2d_int8, same_padded_width
 from repro.kernels.pool_int8.ops import global_avgpool_int8, maxpool_int8
@@ -249,9 +251,11 @@ def registered_engines() -> Dict[str, LayerEngine]:
 
 def select_engine(spec: ConvLayerSpec) -> LayerEngine:
     """The compile-time choice: highest-priority engine claiming the spec.
-    Block engines (``is_block``) bind groups, not layers — skipped here."""
+    Unit-granular engines (``is_block`` / ``is_scan`` / ``is_stem``) bind
+    groups, not layers — skipped here."""
     for eng in registered_engines().values():
-        if getattr(eng, "is_block", False):
+        if (getattr(eng, "is_block", False) or getattr(eng, "is_scan", False)
+                or getattr(eng, "is_stem", False)):
             continue
         if eng.supports(spec):
             return eng
@@ -265,6 +269,27 @@ def select_block_engine(block: ResBlockSpec) -> Optional[LayerEngine]:
     bindings (the always-valid fallback)."""
     for eng in registered_engines().values():
         if getattr(eng, "is_block", False) and eng.supports(block):
+            return eng
+    return None
+
+
+def select_scan_engine(blocks: Sequence[ResBlockSpec]
+                       ) -> Optional[LayerEngine]:
+    """Highest-priority *scan* engine (``is_scan = True``) claiming a
+    homogeneous run of residual blocks, or None — the run's blocks then
+    keep their per-block (or per-layer) bindings."""
+    for eng in registered_engines().values():
+        if getattr(eng, "is_scan", False) and eng.supports(blocks):
+            return eng
+    return None
+
+
+def select_stem_engine(unit: StemUnitSpec) -> Optional[LayerEngine]:
+    """Highest-priority *stem* engine (``is_stem = True``) claiming the
+    stem conv + maxpool unit, or None — the stem layers then keep their
+    per-layer bindings."""
+    for eng in registered_engines().values():
+        if getattr(eng, "is_stem", False) and eng.supports(unit):
             return eng
     return None
 
@@ -591,4 +616,138 @@ class ResBlockInt8Engine:
         y = h.astype(jnp.int32) + identity.astype(jnp.int32)
         y = jnp.clip(y, -127, 127).astype(jnp.int8)
         y = jnp.where(y > 0, y, 0)                    # relu on int8
+        return y, tuple(stats)
+
+
+@register_engine("scanned_res_block_int8", priority=10)
+class ScannedResBlockInt8Engine:
+    """A homogeneous RUN of residual blocks as one ``lax.scan`` over the
+    fused block body — the haliax ``Stacked`` scan-over-layers idiom at
+    the compiler's engine granularity.  The representative (first)
+    block's body is traced ONCE through the same block engine that runs
+    each block individually (so scanned execution is the per-block
+    execution, verbatim); every block's member params stack along a new
+    leading axis and become the scanned-over xs.  The jaxpr cost of the
+    run collapses from ``n_blocks`` bodies to one — the compile-scaling
+    win full-size nets need — while the outputs stay bit-identical to
+    the unrolled trace (same kernels, same order, same values).
+
+    Methods take the block run (and per-block member schedules, outer
+    index = block): ``run`` returns ``(int8 activations, stats)`` where
+    the stats list EVERY member of EVERY block (the scan is a compile
+    strategy, not an accounting change — the Eq. 2 cross-check still
+    covers 100% of the graph, per iteration and summed).
+
+    VMEM: the traced body claims one block's working set; the stacked
+    pinned weights of the remaining ``n_blocks - 1`` iterations stay
+    resident for the whole scan (streamed members re-read from HBM per
+    iteration exactly as before, nothing extra held)."""
+
+    is_scan = True
+
+    def supports(self, blocks: Sequence[ResBlockSpec]) -> bool:
+        if len(blocks) < 2:
+            return False
+        engs = [select_block_engine(b) for b in blocks]
+        return all(e is not None and e.name == engs[0].name for e in engs)
+
+    def vmem_bytes(self, blocks: Sequence[ResBlockSpec],
+                   scheds_per_block: Sequence[Tuple[LayerSchedule, ...]]
+                   ) -> int:
+        body = select_block_engine(blocks[0]).vmem_bytes(
+            blocks[0], scheds_per_block[0])
+        pinned = sum(s.spec.weight_count for s in scheds_per_block[0]
+                     if not s.streamed)
+        return body + (len(blocks) - 1) * pinned
+
+    def stats(self, blocks: Sequence[ResBlockSpec],
+              scheds_per_block: Sequence[Tuple[LayerSchedule, ...]],
+              batch: int) -> Tuple[LayerExecStats, ...]:
+        """Every member of every block, config order, under this engine's
+        name — the scan changes how the graph compiles, never what the
+        accounting covers."""
+        out: List[LayerExecStats] = []
+        for blk, scheds in zip(blocks, scheds_per_block):
+            beng = select_block_engine(blk)
+            out.extend(dataclasses.replace(st, kernel=self.name)
+                       for st in beng.stats(blk, scheds, batch))
+        return tuple(out)
+
+    def run(self, ctx: EngineContext, blocks: Sequence[ResBlockSpec],
+            scheds_per_block: Sequence[Tuple[LayerSchedule, ...]],
+            params: Params, x
+            ) -> Tuple[jnp.ndarray, Tuple[LayerExecStats, ...]]:
+        rep = blocks[0]
+        beng = select_block_engine(rep)
+        order = rep.members
+        # per member position: stack that member's params across the run's
+        # blocks along a new leading axis (the scanned xs — lax.scan
+        # slices one block's weights per iteration)
+        stacked = tuple(
+            jax.tree_util.tree_map(
+                lambda *leaves: jnp.stack(leaves),
+                *[params[b.members[j].name] for b in blocks])
+            for j in range(len(order)))
+
+        def body(h, per_iter):
+            # one iteration IS one block: route the representative
+            # block's specs/schedules through the block engine with this
+            # iteration's weights (homogeneity makes the shapes agree)
+            fake = {m.name: p for m, p in zip(order, per_iter)}
+            y, _ = beng.run(ctx, rep, scheds_per_block[0], fake, h)
+            return y, None
+
+        y, _ = jax.lax.scan(body, x, stacked)
+        return y, self.stats(blocks, scheds_per_block, int(x.shape[0]))
+
+
+@register_engine("stem_pool_int8", priority=10)
+class StemPoolInt8Engine:
+    """The stem conv + following maxpool as ONE schedulable unit — the
+    carried-over ROADMAP nicety: the stem pair rides the block-unit
+    machinery (one dispatch, one VMEM cost, contiguous member stats)
+    instead of two separate nodes.  Members execute on their per-layer
+    engine bindings (the conv pinned or HBM-streamed per its schedule,
+    the pool weightless), joined by the conv's output map as the only
+    intermediate the unit stages."""
+
+    is_stem = True
+
+    def supports(self, unit: StemUnitSpec) -> bool:
+        try:
+            ce = select_engine(unit.conv)
+            pe = select_engine(unit.pool)
+        except LookupError:                            # pragma: no cover
+            return False
+        # both members must land on the Pallas engines this unit fuses;
+        # anything else (jnp_ref fallback after an unregister) keeps the
+        # per-layer bindings so the engine table says what truly runs
+        return (ce.name in ("conv2d_int8", "dwconv_int8")
+                and pe.name == "maxpool_int8")
+
+    def vmem_bytes(self, unit: StemUnitSpec,
+                   scheds: Tuple[LayerSchedule, ...]) -> int:
+        cs, ps = scheds
+        handoff = unit.conv.out_h * unit.conv.out_w * unit.conv.c_out  # int8
+        return (select_engine(unit.conv).vmem_bytes(unit.conv, cs)
+                + select_engine(unit.pool).vmem_bytes(unit.pool, ps)
+                + handoff)
+
+    def stats(self, unit: StemUnitSpec, scheds: Tuple[LayerSchedule, ...],
+              batch: int) -> Tuple[LayerExecStats, ...]:
+        return tuple(
+            dataclasses.replace(select_engine(m).stats(s, batch),
+                                kernel=self.name)
+            for m, s in zip(unit.members, scheds))
+
+    def run(self, ctx: EngineContext, unit: StemUnitSpec,
+            scheds: Tuple[LayerSchedule, ...], params: Params, x
+            ) -> Tuple[jnp.ndarray, Tuple[LayerExecStats, ...]]:
+        cs, ps = scheds
+        stats: List[LayerExecStats] = []
+        y, _, st = select_engine(unit.conv).run(
+            ctx, cs, params[unit.conv.name], x, True)
+        stats.append(dataclasses.replace(st, kernel=self.name))
+        y, _, st = select_engine(unit.pool).run(ctx, ps, {}, y, False)
+        stats.append(dataclasses.replace(st, kernel=self.name))
         return y, tuple(stats)

@@ -164,8 +164,11 @@ class StagePartition:
             placements=cp.plan.placements[start:stop])
         stage_blocks = tuple(b for b in cp.block_assignments
                              if set(b.members) <= names)
+        stage_scans = tuple(g for g in cp.scan_assignments
+                            if set(g.member_names) <= names)
         rep = ExecutionReport(plan=subplan, images=batch,
-                              block_assignments=stage_blocks)
+                              block_assignments=stage_blocks,
+                              scan_assignments=stage_scans)
         rep.layers.extend(cp.stats_template(batch)[start:stop])
         return rep
 
@@ -207,21 +210,32 @@ class StagePartition:
 
 def _atomic_units(compiled: "CompiledPipeline") -> List[Tuple[int, int]]:
     """Contiguous [start, stop) index ranges that stage cuts must not
-    split: residual blocks (fused or not — the identity add spans the
-    block either way) count as one unit, everything else is its own."""
+    split: scan groups are ONE unit (the run is one ``lax.scan`` body —
+    a cut inside it would have to unroll the scan, defeating the trace
+    win), residual blocks (fused or not — the identity add spans the
+    block either way) are one unit, fused non-residual units (the stem
+    conv+pool pair) are one unit, everything else is its own."""
     cfg = compiled.plan.cfg
     owner = {}
+    # coarsest granularity wins: claim scan groups first, then residual
+    # blocks not inside one, then the remaining fused units (stem pair)
+    for g in compiled.scan_assignments:
+        for m in g.member_names:
+            owner[m] = g.group
     for b in residual_blocks(cfg):
         for m in b.members:
-            owner[m.name] = b.name
+            owner.setdefault(m.name, b.name)
+    for ba in compiled.block_assignments:
+        for m in ba.members:
+            owner.setdefault(m, ba.block)
     units: List[Tuple[int, int]] = []
     names = [l.name for l in cfg.layers]
     i = 0
     while i < len(names):
         if names[i] in owner:
-            block = owner[names[i]]
+            unit = owner[names[i]]
             j = i
-            while j < len(names) and owner.get(names[j]) == block:
+            while j < len(names) and owner.get(names[j]) == unit:
                 j += 1
             units.append((i, j))
             i = j
@@ -315,11 +329,12 @@ def stage_forward_fns(part: StagePartition, *, interpret: bool,
     fns: List[Callable] = []
     for s, sp in enumerate(part.stages):
         sink = None if collect is None else collect[s]
-        dispatch, block_dispatch = make_dispatchers(compiled, ctx, sink)
+        dispatch, block_dispatch, scan_dispatch = make_dispatchers(
+            compiled, ctx, sink)
 
         def fn(params, x, _range=sp.layer_range, _d=dispatch,
-               _b=block_dispatch):
+               _b=block_dispatch, _s=scan_dispatch):
             return cnn_forward(params, cfg, x, engine=_d, block_engine=_b,
-                               layer_range=_range)
+                               scan_engine=_s, layer_range=_range)
         fns.append(fn)
     return fns

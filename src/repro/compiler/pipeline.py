@@ -62,11 +62,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import time
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import (TYPE_CHECKING, Any, Callable, Dict, List, Optional,
                     Sequence, Tuple, Union)
 
 import jax
+import jax.numpy as jnp
 
 if TYPE_CHECKING:                     # import cycle guard: autotune uses
     from repro.compiler.autotune import (AutotuneConfig,  # pragma: no cover
@@ -74,11 +77,14 @@ if TYPE_CHECKING:                     # import cycle guard: autotune uses
 
 from repro.compiler.engines import (EngineContext,  # noqa: F401 (re-export)
                                     LayerExecStats, get_engine,
-                                    select_block_engine, select_engine)
+                                    select_block_engine, select_engine,
+                                    select_scan_engine, select_stem_engine)
 from repro.compiler.target import NX2100, Target
-from repro.configs.cnn import CNNConfig, residual_blocks
+from repro.configs.cnn import (CNNConfig, ResBlockSpec, StemUnitSpec,
+                               residual_blocks, stem_unit)
 from repro.core import fifo_sim, hbm_model, placement
-from repro.core.schedule import (HBM, PINNED, LayerSchedule, PipelinePlan)
+from repro.core.schedule import (HBM, PINNED, LayerSchedule, PipelinePlan,
+                                 ScanGroup, detect_scan_groups)
 
 
 class CompileError(ValueError):
@@ -122,6 +128,7 @@ class EngineAssignment:
     mode: str                     # PINNED | HBM
     vmem_bytes: int               # working set the binding claims
     block: Optional[str] = None   # owning block unit, if any
+    scan: Optional[str] = None    # owning scan group, if any
 
 
 @dataclass(frozen=True)
@@ -138,12 +145,89 @@ class BlockAssignment:
 
 
 @dataclass(frozen=True)
+class ScanGroupAssignment:
+    """One scanned block run: a shape- and schedule-homogeneous run of
+    fused residual blocks bound to a scan engine, so the stage-6 trace
+    emits ONE ``lax.scan`` body instead of ``n_blocks`` unrolled block
+    bodies.  Eq. 2 accounting stays per-block AND summed: the scan is a
+    compile strategy, never an accounting change."""
+
+    group: str                              # scan group name ("scan:a..b")
+    engine: str                             # scan engine registry name
+    blocks: Tuple[str, ...]                 # member block names, order
+    members: Tuple[Tuple[str, ...], ...]    # per-block member layer names
+    layer_range: Tuple[int, int]            # [start, stop) into cfg.layers
+    vmem_bytes: int                         # whole-run working set
+    hbm_words_per_block: int                # Eq. 2 words, one iteration
+    hbm_words_per_image: int                # Eq. 2 words, whole run
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def member_names(self) -> Tuple[str, ...]:
+        """All member layer names across the run, config order."""
+        return tuple(n for ms in self.members for n in ms)
+
+
+@dataclass(frozen=True)
 class FusedTrace:
     """One stage-6 artifact: the XLA executable for a concrete input
     shape plus the stats template its trace produced."""
 
     fn: Callable                  # AOT-compiled (params, images) -> logits
     stats: Tuple[LayerExecStats, ...]
+
+
+class _TraceCache:
+    """The stage-6 trace cache: a bounded LRU keyed by (input shape,
+    dtype, interpret, act_scale) with hit/miss/eviction counters.
+
+    ``get_or_create`` holds the lock across the whole check-create-insert
+    sequence — a SINGLE critical section, not double-checked locking.
+    The old double-checked fill had a lost-race window: two threads could
+    both miss, both trace, and the loser's compilation was thrown away
+    (wasted work) — or worse, the two FusedTrace values could interleave
+    with the eviction bookkeeping.  Tracing under the lock serializes
+    compilation per pipeline, which is exactly the contract ``run()``
+    wants: concurrent first calls on one shape share ONE trace (pinned by
+    the threaded re-entrancy test counting retraces)."""
+
+    def __init__(self, max_entries: int):
+        if max_entries < 1:
+            raise ValueError(f"trace cache needs >= 1 entry, "
+                             f"got {max_entries}")
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[Any, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get_or_create(self, key, factory: Callable[[], Any]):
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return hit
+            self.misses += 1
+            value = self._entries[key] = factory()
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+            return value
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"entries": len(self._entries),
+                    "max_entries": self.max_entries,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions}
 
 
 @dataclass(frozen=True)
@@ -155,6 +239,10 @@ class CompiledPipeline:
     assignments: Tuple[EngineAssignment, ...]
     replaced: Tuple[str, ...] = ()    # layers stage 5 moved pin -> stream
     block_assignments: Tuple[BlockAssignment, ...] = ()
+    scan_assignments: Tuple[ScanGroupAssignment, ...] = ()
+    #: bound on distinct stage-6 traces held live (LRU beyond it); see
+    #: ``trace_cache_stats``.
+    trace_cache_size: int = 8
     #: search provenance when the plan came from the placement + FIFO
     #: co-optimizer (``compile(..., autotune=...)``): the greedy-vs-tuned
     #: evaluations plus the co-optimized serving credit bound that
@@ -162,13 +250,13 @@ class CompiledPipeline:
     tuning: Optional["AutotuneResult"] = None
 
     def __post_init__(self):
-        # the stage-6 trace cache + its lock are created EAGERLY (not
-        # via cached_property, whose lazy first evaluation races on
+        # the stage-6 trace cache is created EAGERLY (not via
+        # cached_property, whose lazy first evaluation races on
         # Python >= 3.12) so concurrent run()s on a fresh pipeline
-        # always see the same lock and the same dict.  Frozen
+        # always see the same cache and the same lock.  Frozen
         # dataclasses permit object.__setattr__ into __dict__.
-        object.__setattr__(self, "_fused_cache", {})
-        object.__setattr__(self, "_fused_lock", threading.Lock())
+        object.__setattr__(self, "_fused_cache",
+                           _TraceCache(self.trace_cache_size))
 
     # -- introspection ------------------------------------------------------
 
@@ -191,6 +279,38 @@ class CompiledPipeline:
             idx[b.block] = b
             for m in b.members:
                 idx[m] = b
+        return idx
+
+    def scan_table(self) -> Dict[str, Tuple[str, ...]]:
+        """scan group -> member block names, in pipeline order."""
+        return {g.group: g.blocks for g in self.scan_assignments}
+
+    def scan_for(self, name: str) -> Optional[ScanGroupAssignment]:
+        """The scan group a group / block / member layer name belongs to."""
+        return self._scan_index.get(name)
+
+    @functools.cached_property
+    def _scan_index(self) -> Dict[str, ScanGroupAssignment]:
+        idx: Dict[str, ScanGroupAssignment] = {}
+        for g in self.scan_assignments:
+            idx[g.group] = g
+            for b in g.blocks:
+                idx[b] = g
+            for m in g.member_names:
+                idx[m] = g
+        return idx
+
+    @functools.cached_property
+    def _unit_index(self) -> Dict[str, Union[ResBlockSpec, StemUnitSpec]]:
+        """unit name -> the spec it fuses: every residual block by name,
+        plus the stem unit (keyed by its conv's name) when the config
+        has one — what ``stats_template`` and the scan dispatch use to
+        recover the spec a :class:`BlockAssignment` binds."""
+        idx: Dict[str, Union[ResBlockSpec, StemUnitSpec]] = {
+            b.name: b for b in residual_blocks(self.plan.cfg)}
+        su = stem_unit(self.plan.cfg)
+        if su is not None:
+            idx[su.name] = su
         return idx
 
     def vmem_report(self) -> Dict[str, int]:
@@ -249,7 +369,8 @@ class CompiledPipeline:
         that exceeds the target's VMEM budget raises
         :class:`TargetBudgetError` instead of silently streaming."""
         return finalize(self.plan.with_offload(names), self.target,
-                        replace=False)
+                        replace=False,
+                        trace_cache_size=self.trace_cache_size)
 
     # -- execution ----------------------------------------------------------
 
@@ -276,22 +397,36 @@ class CompiledPipeline:
         ``layers`` is pinned by test for executable configs, which is
         what lets the full-size nets be cross-checked without running
         224x224 images through the interpreter."""
-        blocks = {b.name: b for b in residual_blocks(self.plan.cfg)}
+        units = self._unit_index
         out: List[LayerExecStats] = []
         emitted = set()
         for a, s in zip(self.assignments, self.plan.schedules):
-            if a.block is not None:
-                # fused unit: the block engine owns its members' stats
-                # accounting (ONE source — the same method its run
-                # mirrors); members are contiguous in config order, so
-                # emit the whole unit at its first member
+            if a.scan is not None:
+                # scanned run: the scan engine owns EVERY member of EVERY
+                # block in the run (summed-and-per-iteration Eq. 2 words);
+                # the run is contiguous in config order, so emit it whole
+                # at its first member
+                if a.scan in emitted:
+                    continue
+                emitted.add(a.scan)
+                g = self.scan_for(a.scan)
+                out.extend(get_engine(g.engine).stats(
+                    [units[b] for b in g.blocks],
+                    [self.plan.schedules_for(ms) for ms in g.members],
+                    batch))
+            elif a.block is not None:
+                # fused unit (residual block or stem pair): the unit
+                # engine owns its members' stats accounting (ONE source —
+                # the same method its run mirrors); members are
+                # contiguous in config order, so emit the whole unit at
+                # its first member
                 if a.block in emitted:
                     continue
                 emitted.add(a.block)
                 basn = self.block_for(a.block)
                 scheds = self.plan.schedules_for(basn.members)
                 out.extend(get_engine(basn.engine).stats(
-                    blocks[a.block], scheds, batch))
+                    units[a.block], scheds, batch))
             else:
                 out.append(get_engine(a.engine).stats(s, batch))
         return tuple(out)
@@ -302,7 +437,8 @@ class CompiledPipeline:
         ``eq2_report().verify()`` is the whole-net plan-vs-dispatch
         Eq. 2 cross-check at compile time."""
         rep = ExecutionReport(plan=self.plan, images=batch,
-                              block_assignments=self.block_assignments)
+                              block_assignments=self.block_assignments,
+                              scan_assignments=self.scan_assignments)
         rep.layers.extend(self.stats_template(batch))
         return rep
 
@@ -350,34 +486,39 @@ class CompiledPipeline:
                                        microbatch=microbatch, **kw)
 
     # -- stage 6: the fused whole-pipeline trace ----------------------------
-    # _fused_cache: (shape, dtype, interpret, act_scale) -> FusedTrace,
-    # created in __post_init__ so it lives with the pipeline and every
-    # executor (and thread) shares the compilations.
+    # _fused_cache: a bounded-LRU :class:`_TraceCache` keyed by (shape,
+    # dtype, interpret, act_scale), created in __post_init__ so it lives
+    # with the pipeline and every executor (and thread) shares the
+    # compilations.
 
     @property
     def trace_count(self) -> int:
-        """How many distinct (shape, dtype, config) traces stage 6 has
-        compiled — a warm shape must NOT retrace (tested)."""
+        """How many distinct (shape, dtype, config) traces stage 6 holds
+        LIVE — a warm shape must NOT retrace (tested); bounded by
+        ``trace_cache_size`` (LRU beyond it)."""
         return len(self._fused_cache)
+
+    def trace_cache_stats(self) -> Dict[str, int]:
+        """Stage-6 trace cache counters: ``entries`` / ``max_entries`` /
+        ``hits`` / ``misses`` / ``evictions``.  Surfaced by
+        :class:`~repro.runtime.cnn_serving.ServingReport` so serving
+        exposes whether its shape population thrashes the bound."""
+        return self._fused_cache.stats()
 
     def fused_trace(self, params, images, *, interpret: bool,
                     act_scale: float) -> FusedTrace:
         """The stage-6 artifact for this input shape: one jitted XLA
         program closing the whole engine table over ``cnn_forward``,
         plus the stats template collected while tracing it.  Cached per
-        (shape, dtype, interpret, act_scale); thread-safe so concurrent
-        ``run()``\\ s on one pipeline share a single compilation."""
+        (shape, dtype, interpret, act_scale) in a bounded LRU
+        (``trace_cache_size`` entries); the fill is ONE critical section,
+        so concurrent ``run()``\\ s on one pipeline share a single
+        compilation — never a lost-race duplicate trace."""
         key = (tuple(images.shape), str(images.dtype), interpret, act_scale)
-        hit = self._fused_cache.get(key)
-        if hit is not None:
-            return hit
-        with self._fused_lock:
-            hit = self._fused_cache.get(key)
-            if hit is None:
-                hit = trace_fused(self, params, images, interpret=interpret,
-                                  act_scale=act_scale)
-                self._fused_cache[key] = hit
-        return hit
+        return self._fused_cache.get_or_create(
+            key, lambda: trace_fused(self, params, images,
+                                     interpret=interpret,
+                                     act_scale=act_scale))
 
 
 @dataclass
@@ -393,6 +534,7 @@ class ExecutionReport:
     images: int = 0
     layers: list = dataclasses.field(default_factory=list)  # LayerExecStats
     block_assignments: Tuple["BlockAssignment", ...] = ()
+    scan_assignments: Tuple["ScanGroupAssignment", ...] = ()
 
     @property
     def hbm_weight_words(self) -> Dict[str, int]:
@@ -442,6 +584,30 @@ class ExecutionReport:
         """Executed streamed words per fused block unit, whole batch."""
         return {r["block"]: r["hbm_words"] for r in self.block_rows()}
 
+    def scan_rows(self) -> List[Dict[str, Any]]:
+        """Scan-group Eq. 2 rows: one per scanned block run, with the
+        EXECUTED streamed words summed over the run AND per iteration
+        (per member block), against the plan-side per-block and whole-run
+        words the :class:`ScanGroupAssignment` claims.  The per-iteration
+        column is what proves the scan did not collapse the accounting:
+        every block of the run streams its own weights, homogeneously."""
+        executed = self.hbm_weight_words
+        rows: List[Dict[str, Any]] = []
+        for g in self.scan_assignments:
+            per_block = [sum(executed.get(m, 0) for m in ms)
+                         for ms in g.members]
+            rows.append({
+                "group": g.group,
+                "engine": g.engine,
+                "blocks": list(g.blocks),
+                "n_blocks": g.n_blocks,
+                "hbm_words": sum(per_block),
+                "hbm_words_per_block": per_block,
+                "plan_hbm_words_per_block": g.hbm_words_per_block,
+                "plan_hbm_words_per_image": g.hbm_words_per_image,
+            })
+        return rows
+
     def verify(self) -> "ExecutionReport":
         """HARD-FAIL Eq. 2 cross-check over the whole topology: every
         graph node dispatched exactly once per image, executed streamed
@@ -475,6 +641,19 @@ class ExecutionReport:
                 raise Eq2MismatchError(
                     f"block {row['block']}: executed {row['hbm_words']} "
                     f"words != plan {want}")
+        for row in self.scan_rows():
+            want = row["plan_hbm_words_per_image"] * self.images
+            if row["hbm_words"] != want:
+                raise Eq2MismatchError(
+                    f"scan group {row['group']}: executed "
+                    f"{row['hbm_words']} words != plan {want}")
+            per = row["plan_hbm_words_per_block"] * self.images
+            for blk, w in zip(row["blocks"], row["hbm_words_per_block"]):
+                if w != per:
+                    raise Eq2MismatchError(
+                        f"scan group {row['group']} iteration {blk}: "
+                        f"executed {w} words != plan {per} (the scanned "
+                        f"body must stream every iteration's weights)")
         return self
 
     def fifo_prediction(self, outputs_needed: int = 32,
@@ -519,11 +698,19 @@ def plan_pipeline(cfg: CNNConfig, target: Target) -> PipelinePlan:
 
 def finalize(plan: PipelinePlan, target: Optional[Target], *,
              replace: bool = True,
-             tuning: Optional["AutotuneResult"] = None) -> CompiledPipeline:
+             tuning: Optional["AutotuneResult"] = None,
+             scan: bool = True,
+             trace_cache_size: int = 8) -> CompiledPipeline:
     """Stages 4-5 over an existing plan: bind every layer to a registered
     engine, then enforce the target's VMEM budget — re-placing pinned
     layers whose working set only fits when streamed, and raising
     :class:`TargetBudgetError` for layers that fit in neither tier.
+
+    ``scan=False`` disables scan-group binding (stage 4 then emits the
+    unrolled fused trace of before — the differential baseline the
+    scanned trace is pinned bit-identical against, and the knob
+    ``benchmarks/compile_scaling.py`` measures the win over).
+    ``trace_cache_size`` bounds the stage-6 LRU trace cache.
 
     Re-placement respects Algorithm 1's hard feasibility constraint: a
     move consumes the layer's ``p_i * p_o`` tensor-chain feeds from the
@@ -619,21 +806,80 @@ def finalize(plan: PipelinePlan, target: Optional[Target], *,
             assignments[i] = dataclasses.replace(
                 assignments[i], engine=beng.name, block=blk.name)
 
+    # the stem conv + following maxpool pair rides the same block-unit
+    # machinery: one BlockAssignment, one VMEM cost, members dispatching
+    # under the stem engine's name.  Over budget (or members not on the
+    # fused engines) -> per-layer bindings, like any block.
+    su = stem_unit(plan.cfg)
+    if su is not None:
+        seng = select_stem_engine(su)
+        if seng is not None:
+            scheds = plan.schedules_for([m.name for m in su.members])
+            vb = seng.vmem_bytes(su, scheds)
+            if target is None or vb <= target.vmem_bytes:
+                blocks.append(BlockAssignment(
+                    block=su.name, engine=seng.name,
+                    members=tuple(m.name for m in su.members),
+                    vmem_bytes=vb,
+                    hbm_words_per_image=sum(s.weight_words_per_image
+                                            for s in scheds if s.streamed)))
+                for m in su.members:
+                    i = by_layer[m.name]
+                    assignments[i] = dataclasses.replace(
+                        assignments[i], engine=seng.name, block=su.name)
+
+    # scan-group binding: homogeneous runs of block-bound residual blocks
+    # (same shapes, same schedules, same block engine) become ONE
+    # lax.scan over the fused body — the jaxpr cost of the run collapses
+    # to one iteration while the Eq. 2 accounting stays per block.
+    scans: List[ScanGroupAssignment] = []
+    if scan:
+        basn_by_name = {b.block: b for b in blocks}
+        blk_specs = {b.name: b for b in residual_blocks(plan.cfg)}
+        for g in detect_scan_groups(plan):
+            basns = [basn_by_name.get(bn) for bn in g.blocks]
+            if any(b is None for b in basns):
+                continue                  # some block fell back per-layer
+            if len({b.engine for b in basns}) != 1:
+                continue                  # mixed block engines: no one body
+            group_blocks = [blk_specs[bn] for bn in g.blocks]
+            sceng = select_scan_engine(group_blocks)
+            if sceng is None:
+                continue
+            scheds_pb = [plan.schedules_for(ms) for ms in g.members]
+            vb = sceng.vmem_bytes(group_blocks, scheds_pb)
+            if target is not None and vb > target.vmem_bytes:
+                continue                  # stacked weights over budget
+            per_block = sum(s.weight_words_per_image
+                            for s in scheds_pb[0] if s.streamed)
+            scans.append(ScanGroupAssignment(
+                group=g.name, engine=sceng.name, blocks=g.blocks,
+                members=g.members, layer_range=g.layer_range,
+                vmem_bytes=vb, hbm_words_per_block=per_block,
+                hbm_words_per_image=per_block * g.n_blocks))
+            for ms in g.members:
+                for m in ms:
+                    i = by_layer[m]
+                    assignments[i] = dataclasses.replace(
+                        assignments[i], engine=sceng.name, scan=g.name)
+
     return CompiledPipeline(plan=plan, target=target,
                             assignments=tuple(assignments),
                             replaced=tuple(moved),
                             block_assignments=tuple(blocks),
+                            scan_assignments=tuple(scans),
+                            trace_cache_size=trace_cache_size,
                             tuning=tuning)
 
 
 def make_dispatchers(compiled: CompiledPipeline, ctx: EngineContext,
                      collect: Optional[List[LayerExecStats]]
-                     ) -> Tuple[Callable, Callable]:
-    """The (layer, block) dispatch hooks ``cnn_forward`` routes through:
-    each offered layer/block executes on its compile-time binding, with
-    the returned :class:`LayerExecStats` appended to ``collect``.  Used
-    by both the eager per-layer walk (collecting per call) and the
-    stage-6 trace (collecting once, at trace time)."""
+                     ) -> Tuple[Callable, Callable, Callable]:
+    """The (layer, block, scan) dispatch hooks ``cnn_forward`` routes
+    through: each offered layer/block/run executes on its compile-time
+    binding, with the returned :class:`LayerExecStats` appended to
+    ``collect``.  Used by both the eager per-layer walk (collecting per
+    call) and the stage-6 trace (collecting once, at trace time)."""
     plan = compiled.plan
 
     def dispatch(spec, p, x, relu: bool):
@@ -658,7 +904,26 @@ def make_dispatchers(compiled: CompiledPipeline, ctx: EngineContext,
             collect.extend(stats)
         return y
 
-    return dispatch, block_dispatch
+    def scan_dispatch(block, params, x, limit: int):
+        # offered at every residual block's lead conv: accept only when
+        # this block LEADS a bound scan group and the whole run fits the
+        # active layer_range (partitioning keeps groups atomic, so a
+        # truncated offer means a caller-forced odd range — decline and
+        # let per-block execution cover it, bit-identically)
+        g = compiled.scan_for(block.name)
+        if g is None or g.blocks[0] != block.name:
+            return None
+        n = len(g.member_names)
+        if n > limit:
+            return None
+        blocks = [compiled._unit_index[bn] for bn in g.blocks]
+        scheds = [plan.schedules_for(ms) for ms in g.members]
+        y, stats = get_engine(g.engine).run(ctx, blocks, scheds, params, x)
+        if collect is not None:
+            collect.extend(stats)
+        return y, n
+
+    return dispatch, block_dispatch, scan_dispatch
 
 
 def trace_fused(compiled: CompiledPipeline, params, images, *,
@@ -680,12 +945,14 @@ def trace_fused(compiled: CompiledPipeline, params, images, *,
 
     ctx = EngineContext(interpret=interpret, act_scale=act_scale)
     stats: List[LayerExecStats] = []
-    dispatch, block_dispatch = make_dispatchers(compiled, ctx, stats)
+    dispatch, block_dispatch, scan_dispatch = make_dispatchers(
+        compiled, ctx, stats)
     cfg = compiled.plan.cfg
 
     def forward(p, x):
         return cnn_forward(p, cfg, x, engine=dispatch,
-                           block_engine=block_dispatch)
+                           block_engine=block_dispatch,
+                           scan_engine=scan_dispatch)
 
     donate = () if interpret else (1,)
     jitted = jax.jit(forward, donate_argnums=donate)
@@ -693,8 +960,65 @@ def trace_fused(compiled: CompiledPipeline, params, images, *,
     return FusedTrace(fn=fn, stats=tuple(stats))
 
 
+def trace_fused_abstract(compiled: CompiledPipeline, batch: int = 1, *,
+                         interpret: bool = True, act_scale: float = 0.05):
+    """Trace the stage-6 fused program with ABSTRACT params and inputs:
+    returns ``(closed_jaxpr, trace_seconds)`` — no weights materialized,
+    nothing executed, nothing lowered to XLA.  This is the
+    compile-scaling instrument (``benchmarks/compile_scaling.py``):
+    full-size 224x224 nets trace in seconds without allocating a single
+    parameter, and :func:`count_jaxpr_eqns` on the result measures the
+    scan-over-blocks equation-count win directly on the IR the compiler
+    would consume."""
+    from repro.models.cnn import (cnn_forward, cnn_input_shape,
+                                  init_cnn_params)
+
+    ctx = EngineContext(interpret=interpret, act_scale=act_scale)
+    dispatch, block_dispatch, scan_dispatch = make_dispatchers(
+        compiled, ctx, None)
+    cfg = compiled.plan.cfg
+
+    def forward(p, x):
+        return cnn_forward(p, cfg, x, engine=dispatch,
+                           block_engine=block_dispatch,
+                           scan_engine=scan_dispatch)
+
+    params = jax.eval_shape(
+        lambda: init_cnn_params(jax.random.PRNGKey(0), cfg))
+    x = jax.ShapeDtypeStruct(cnn_input_shape(cfg, batch), jnp.int8)
+    t0 = time.perf_counter()
+    traced = jax.jit(forward).trace(params, x)
+    seconds = time.perf_counter() - t0
+    return traced.jaxpr, seconds
+
+
+def count_jaxpr_eqns(jaxpr) -> int:
+    """Total equations in ``jaxpr``, recursing into sub-jaxprs nested in
+    equation params (scan/cond/pjit bodies) — each sub-jaxpr counted
+    ONCE, which is exactly the quantity the scan-over-blocks trace
+    shrinks: a ``lax.scan`` body's equations appear once regardless of
+    how many blocks the run iterates."""
+    if hasattr(jaxpr, "jaxpr"):                       # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        for v in eqn.params.values():
+            n += _count_sub_eqns(v)
+    return n
+
+
+def _count_sub_eqns(v) -> int:
+    if isinstance(v, (list, tuple)):
+        return sum(_count_sub_eqns(x) for x in v)
+    if hasattr(v, "jaxpr") or hasattr(v, "eqns"):
+        return count_jaxpr_eqns(v)
+    return 0
+
+
 def compile(cfg: CNNConfig, target: Target = NX2100, *,
-            autotune: Union[None, bool, "AutotuneConfig"] = None
+            autotune: Union[None, bool, "AutotuneConfig"] = None,
+            scan: bool = True, trace_cache_size: int = 8
             ) -> CompiledPipeline:
     """Compile a CNN for a target: passes 1-5 up front, validated and
     executable; the stage-6 fused trace is instantiated (and cached) per
@@ -708,10 +1032,16 @@ def compile(cfg: CNNConfig, target: Target = NX2100, *,
     ``eq2_report().verify()`` guarantees — whose tier decisions are
     taken verbatim from the search (no stage-5 re-placement: the tuned
     plan already satisfies the VMEM budget per layer), with the search
-    record attached as ``.tuning``."""
+    record attached as ``.tuning``.
+
+    ``scan=False`` compiles the unrolled fused trace (no scan-group
+    binding) — the differential baseline; ``trace_cache_size`` bounds
+    the stage-6 LRU trace cache."""
     if autotune is None or autotune is False:
-        return finalize(plan_pipeline(cfg, target), target)
+        return finalize(plan_pipeline(cfg, target), target, scan=scan,
+                        trace_cache_size=trace_cache_size)
     from repro.compiler.autotune import AutotuneConfig, autotune_plan
     at = AutotuneConfig() if autotune is True else autotune
     result = autotune_plan(cfg, target, at)
-    return finalize(result.plan, target, replace=False, tuning=result)
+    return finalize(result.plan, target, replace=False, tuning=result,
+                    scan=scan, trace_cache_size=trace_cache_size)

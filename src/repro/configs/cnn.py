@@ -202,6 +202,79 @@ def residual_blocks(cfg: "CNNConfig") -> Tuple[ResBlockSpec, ...]:
     return tuple(blocks)
 
 
+def block_shape_signature(block: ResBlockSpec) -> Tuple:
+    """Name-independent shape signature of a residual block: member
+    kinds, kernel/channel/stride/input geometry, conv count and
+    downsample presence.  Two blocks with equal signatures run the SAME
+    computation on same-shaped tensors — the compile-time condition for
+    folding them into one scanned body (their weights stack along a
+    leading axis; only the values differ)."""
+    def sig(m: ConvLayerSpec) -> Tuple:
+        return (m.kind, m.k_h, m.k_w, m.c_in, m.c_out, m.stride,
+                m.in_h, m.in_w)
+    return ((len(block.convs), block.ds is not None)
+            + tuple(sig(m) for m in block.members))
+
+
+def homogeneous_block_runs(cfg: "CNNConfig", min_run: int = 2
+                           ) -> Tuple[Tuple[ResBlockSpec, ...], ...]:
+    """Maximal runs of >= ``min_run`` CONSECUTIVE residual blocks (adjacent
+    in ``cfg.layers``, no interleaving nodes) with identical
+    :func:`block_shape_signature` — e.g. each ResNet-50 stage minus its
+    stride-2 / expanding lead block.  These are the scan candidates the
+    compiler turns into :class:`~repro.core.schedule.ScanGroup`\\ s; the
+    dw/pw alternation of the MobileNets has no residual blocks at all, so
+    they (correctly) yield zero runs."""
+    blocks = residual_blocks(cfg)
+    if not blocks:
+        return ()
+    idx = {l.name: i for i, l in enumerate(cfg.layers)}
+    span = {b.name: (idx[b.members[0].name], idx[b.members[-1].name] + 1)
+            for b in blocks}
+    runs: List[Tuple[ResBlockSpec, ...]] = []
+    cur: List[ResBlockSpec] = [blocks[0]]
+    for prev, b in zip(blocks, blocks[1:]):
+        if (span[prev.name][1] == span[b.name][0]
+                and block_shape_signature(b) == block_shape_signature(prev)):
+            cur.append(b)
+        else:
+            if len(cur) >= min_run:
+                runs.append(tuple(cur))
+            cur = [b]
+    if len(cur) >= min_run:
+        runs.append(tuple(cur))
+    return tuple(runs)
+
+
+@dataclass(frozen=True)
+class StemUnitSpec:
+    """The stem conv + its following maxpool as ONE schedulable unit —
+    the same block-unit machinery residual blocks use, so the stem no
+    longer dispatches as two separate nodes.  ``name`` is the stem
+    conv's layer name (the unit dispatches at its head, like a residual
+    block does at its first conv)."""
+
+    name: str
+    conv: ConvLayerSpec
+    pool: ConvLayerSpec
+
+    @property
+    def members(self) -> Tuple[ConvLayerSpec, ...]:
+        return (self.conv, self.pool)
+
+
+def stem_unit(cfg: "CNNConfig") -> Optional[StemUnitSpec]:
+    """The fusable stem unit of ``cfg``: its first two layers, when they
+    are exactly a conv followed by a maxpool (the ResNet-family stem).
+    Configs whose stem feeds something else (VGG's conv-conv, the
+    MobileNets' conv-dwconv) have no stem unit — None."""
+    if (len(cfg.layers) >= 2 and cfg.layers[0].kind == "conv"
+            and cfg.layers[1].kind == "maxpool"):
+        return StemUnitSpec(name=cfg.layers[0].name,
+                            conv=cfg.layers[0], pool=cfg.layers[1])
+    return None
+
+
 # ---------------------------------------------------------------------------
 # Builders
 # ---------------------------------------------------------------------------
@@ -439,17 +512,26 @@ def mini_resnet18(hw: int = 32, width: int = 32,
 
 
 def mini_resnet50(hw: int = 32, width: int = 16,
-                  stages: int = 2) -> CNNConfig:
+                  stages: int = 2,
+                  blocks_per_stage: int = 1) -> CNNConfig:
     """ResNet-50-topology network (BOTTLENECK blocks: 1x1 -> 3x3 -> 1x1
     with 4x expansion + pwconv downsample) at executable scale — the
     config the bottleneck-fusion differential tests run end to end in
     interpret mode.  One block per stage keeps the pipeline small; the
-    block structure (three convs + ds, names ``s{i}b0c{0,1,2}`` /
-    ``s{i}b0ds``) is exactly ``_resnet(50)``'s, so ``residual_blocks``
+    block structure (three convs + ds, names ``s{i}b{j}c{0,1,2}`` /
+    ``s{i}b{j}ds``) is exactly ``_resnet(50)``'s, so ``residual_blocks``
     groups it identically and ``res_block_int8`` fuses it the same way.
+
+    ``blocks_per_stage > 1`` appends identity bottleneck blocks (no
+    downsample, all same-shaped) behind each stage's lead block — the
+    full-size net's repeat structure at mini scale, which is what the
+    scan-over-blocks compile-scaling benchmark exercises: each stage's
+    ``b1..bN`` run compiles as ONE scanned body.
     """
     if not 1 <= stages <= 4:
         raise ValueError("mini_resnet50 supports 1..4 stages")
+    if blocks_per_stage < 1:
+        raise ValueError("mini_resnet50 needs at least one block per stage")
     if hw % 2:
         raise ValueError("mini_resnet50: hw must be even (the stem "
                          "maxpool halves the map)")
@@ -461,24 +543,27 @@ def mini_resnet50(hw: int = 32, width: int = 16,
     for si in range(stages):
         mid = width * 2 ** min(si, 3)
         out = 4 * mid
-        stride = 2 if si > 0 else 1
-        in_h, in_w = h, w
-        if stride == 2:
-            if (h > 1 and h % 2) or (w > 1 and w % 2):
-                raise ValueError(
-                    f"mini_resnet50: stride-2 transition on an odd {h}x{w} "
-                    f"map; pick hw so maps stay even (or 1) through all "
-                    f"{stages} stages")
-            h, w = max(1, h // 2), max(1, w // 2)
-        layers.append(ConvLayerSpec(
-            f"s{si}b0c0", "pwconv", 1, 1, c_in, mid, 1, in_h, in_w))
-        layers.append(ConvLayerSpec(
-            f"s{si}b0c1", "conv", 3, 3, mid, mid, stride, in_h, in_w))
-        layers.append(ConvLayerSpec(
-            f"s{si}b0c2", "pwconv", 1, 1, mid, out, 1, h, w))
-        layers.append(ConvLayerSpec(
-            f"s{si}b0ds", "pwconv", 1, 1, c_in, out, stride, in_h, in_w))
-        c_in = out
+        for b in range(blocks_per_stage):
+            stride = 2 if (si > 0 and b == 0) else 1
+            in_h, in_w = h, w
+            if stride == 2:
+                if (h > 1 and h % 2) or (w > 1 and w % 2):
+                    raise ValueError(
+                        f"mini_resnet50: stride-2 transition on an odd "
+                        f"{h}x{w} map; pick hw so maps stay even (or 1) "
+                        f"through all {stages} stages")
+                h, w = max(1, h // 2), max(1, w // 2)
+            layers.append(ConvLayerSpec(
+                f"s{si}b{b}c0", "pwconv", 1, 1, c_in, mid, 1, in_h, in_w))
+            layers.append(ConvLayerSpec(
+                f"s{si}b{b}c1", "conv", 3, 3, mid, mid, stride, in_h, in_w))
+            layers.append(ConvLayerSpec(
+                f"s{si}b{b}c2", "pwconv", 1, 1, mid, out, 1, h, w))
+            if b == 0:
+                layers.append(ConvLayerSpec(
+                    f"s{si}b{b}ds", "pwconv", 1, 1, c_in, out, stride,
+                    in_h, in_w))
+            c_in = out
     if h > 1 or w > 1:
         layers.append(_gap(c_in, h, w))
     layers.append(ConvLayerSpec("fc", "fc", 1, 1, c_in, 10, 1, 1, 1))

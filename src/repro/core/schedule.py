@@ -189,6 +189,81 @@ class PipelinePlan:
                                    placements=tuple(new_places))
 
 
+@dataclass(frozen=True)
+class ScanGroup:
+    """A run of consecutive residual blocks the fused trace compiles as
+    ONE scanned body: identical member shapes (``block_shape_signature``)
+    AND identical member schedules (weight tier, buffer ring depth, FIFO
+    depths — everything that changes the executed computation; the
+    pseudo-channel may differ, it is bandwidth bookkeeping).  Per-block
+    params stack along a leading axis and ``lax.scan`` iterates the one
+    traced body over them, so the jaxpr size is independent of the run
+    length — the haliax ``Stacked`` scan-over-layers idiom at block
+    granularity."""
+
+    name: str                               # "scan:s2b1..s2b5"
+    blocks: Tuple[str, ...]                 # member block names, order
+    members: Tuple[Tuple[str, ...], ...]    # per-block member layer names
+    layer_range: Tuple[int, int]            # [start, stop) into cfg.layers
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def member_names(self) -> Tuple[str, ...]:
+        """All member layer names across the group, config order."""
+        return tuple(n for ms in self.members for n in ms)
+
+
+def _schedule_signature(s: LayerSchedule) -> Tuple:
+    """The schedule fields that change what a member dispatch COMPUTES
+    (tier, parallelism, burst, FIFO/buffer depths).  ``pc`` is excluded:
+    which pseudo-channel feeds a streamed engine is plan bookkeeping,
+    not execution semantics."""
+    return (s.mode, s.p_i, s.p_o, s.burst, s.laststage_fifo_depth,
+            s.bm_fifo_words, s.n_buffers)
+
+
+def detect_scan_groups(plan: "PipelinePlan") -> Tuple[ScanGroup, ...]:
+    """The plan's scannable block runs: each shape-homogeneous run
+    (:func:`repro.configs.cnn.homogeneous_block_runs`) split into maximal
+    sub-runs of >= 2 blocks whose member schedules also agree position by
+    position — Algorithm 1 may pin one repeat of a stage and stream
+    another, and such blocks must NOT share a scanned body (the body is
+    traced once, so every iteration executes the same tier/buffer
+    configuration)."""
+    from repro.configs.cnn import homogeneous_block_runs
+    idx = {l.name: i for i, l in enumerate(plan.cfg.layers)}
+    groups: List[ScanGroup] = []
+
+    def sched_sig(block) -> Tuple:
+        return tuple(_schedule_signature(plan.schedule_for(m.name))
+                     for m in block.members)
+
+    def flush(cur) -> None:
+        if len(cur) < 2:
+            return
+        blocks = tuple(b.name for b in cur)
+        groups.append(ScanGroup(
+            name=f"scan:{blocks[0]}..{blocks[-1]}",
+            blocks=blocks,
+            members=tuple(tuple(m.name for m in b.members) for b in cur),
+            layer_range=(idx[cur[0].members[0].name],
+                         idx[cur[-1].members[-1].name] + 1)))
+
+    for run in homogeneous_block_runs(plan.cfg):
+        cur = [run[0]]
+        for prev, b in zip(run, run[1:]):
+            if sched_sig(b) == sched_sig(prev):
+                cur.append(b)
+            else:
+                flush(cur)
+                cur = [b]
+        flush(cur)
+    return tuple(groups)
+
+
 def build_pipeline_plan(cfg: CNNConfig, *,
                         tb_budget: Optional[int] = None,
                         bram_m20ks: Optional[int] = None,

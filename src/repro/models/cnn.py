@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.cnn import (POOL_KINDS, CNNConfig, ConvLayerSpec,
-                               ResBlockSpec, residual_blocks)
+                               ResBlockSpec, residual_blocks, stem_unit)
 from repro.kernels.pool_int8.ref import (global_avgpool_int8_ref,
                                          maxpool_int8_ref)
 from repro.kernels.quant import requant_epilogue
@@ -118,10 +118,22 @@ EngineHook = Callable[[ConvLayerSpec, Params, jnp.ndarray, bool],
 BlockEngineHook = Callable[[ResBlockSpec, Params, jnp.ndarray],
                            Optional[jnp.ndarray]]
 
+# scan_engine(lead_block, params, x, limit) -> Optional[(y_q, consumed)].
+# The scan-group dispatch hook: offered at the LEAD block of each residual
+# block, BEFORE the block hook.  Accepting means the hook executed a whole
+# homogeneous run of blocks starting there (one lax.scan body over stacked
+# per-block params) and consumed ``consumed`` member layers; ``limit`` is
+# how many layers remain in the active layer_range, so the hook declines
+# runs that would cross a stage boundary (per-block execution then covers
+# them).  Returning None falls through to ``block_engine``.
+ScanEngineHook = Callable[[ResBlockSpec, Params, jnp.ndarray, int],
+                          Optional[Tuple[jnp.ndarray, int]]]
+
 
 def cnn_forward(params: Params, cfg: CNNConfig, images,
                 engine: Optional[EngineHook] = None,
                 block_engine: Optional[BlockEngineHook] = None,
+                scan_engine: Optional[ScanEngineHook] = None,
                 layer_range: Optional[Tuple[int, int]] = None
                 ) -> jnp.ndarray:
     """Plain feed-forward execution (the functional reference; the pipeline
@@ -147,6 +159,15 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
     ``block_engine``: block-granular hook, offered each residual block
     BEFORE its layers run individually; declining falls back to the
     per-layer wiring here (which itself offers each layer to ``engine``).
+    The same hook is offered the config's :class:`StemUnitSpec` (stem
+    conv + following maxpool as one fused unit) at the stem, when the
+    config has one.
+
+    ``scan_engine``: scan-group hook, offered at each residual block's
+    lead conv BEFORE ``block_engine`` with the count of layers remaining
+    in the active range; accepting executes a whole homogeneous block
+    run as one scanned body and skips its member layers (see
+    :data:`ScanEngineHook`).
 
     ``layer_range``: ``(start, stop)`` indices into ``cfg.layers`` — run
     only that contiguous slice (the sharded pipeline executor walks one
@@ -184,16 +205,33 @@ def cnn_forward(params: Params, cfg: CNNConfig, images,
                     f"layer_range {where}={cut} cuts residual block "
                     f"{member_head[name]!r} open at member {name!r}; "
                     f"stage cuts must treat blocks as atomic units")
+    stem = stem_unit(cfg)
     i = start
     while i < stop:
         spec = layers[i]
         name = spec.name
+        if (stem is not None and name == stem.conv.name and i + 2 <= stop
+                and block_engine is not None):
+            # the stem conv + maxpool pair as one fused unit; declining
+            # (or a range that cuts the pair) falls through to the
+            # per-layer walk below, bit-identically
+            out = block_engine(stem, params, x)
+            if out is not None:
+                x = out
+                i += 2
+                continue
         if spec.is_pool:
             x, _ = apply_layer(spec, x, relu=False)
             i += 1
             continue
         if name in blocks:
             blk = blocks[name]
+            if scan_engine is not None:
+                out = scan_engine(blk, params, x, stop - i)
+                if out is not None:
+                    x, consumed = out
+                    i += consumed
+                    continue
             if block_engine is not None:
                 out = block_engine(blk, params, x)
                 if out is not None:

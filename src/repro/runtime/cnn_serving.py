@@ -198,6 +198,10 @@ class ServingReport:
     hbm_words_executed: int           # traced words incl. padded rows
     queue_depth: List[Tuple[float, int]] = field(default_factory=list)
     request_rows: List[Dict[str, Any]] = field(default_factory=list)
+    #: stage-6 LRU trace cache counters (entries/max_entries/hits/misses/
+    #: evictions) from ``CompiledPipeline.trace_cache_stats()`` — whether
+    #: the serving interval's shape population thrashes the trace bound.
+    trace_cache: Dict[str, int] = field(default_factory=dict)
 
     @property
     def pad_fraction(self) -> float:
@@ -445,6 +449,7 @@ class CnnServingEngine:
                 * self.words_per_image,
                 queue_depth=list(self._depth_samples),
                 request_rows=list(self._request_rows),
+                trace_cache=self.compiled.trace_cache_stats(),
             )
 
     # -- worker threads ------------------------------------------------------

@@ -113,7 +113,9 @@ class PipelineExecutor:
         """images: [B,H,W,C] int8 -> (logits [B,classes], report)."""
         report = ExecutionReport(plan=self.plan, images=int(images.shape[0]),
                                  block_assignments=self.compiled
-                                 .block_assignments)
+                                 .block_assignments,
+                                 scan_assignments=self.compiled
+                                 .scan_assignments)
         if self.backend == "fused":
             trace = self.compiled.fused_trace(
                 params, images, interpret=self.interpret,
@@ -124,10 +126,11 @@ class PipelineExecutor:
 
         ctx = EngineContext(interpret=self.interpret,
                             act_scale=self.act_scale)
-        dispatch, block_dispatch = make_dispatchers(
+        dispatch, block_dispatch, scan_dispatch = make_dispatchers(
             self.compiled, ctx, report.layers)
         logits = cnn_forward(params, self.plan.cfg, images, engine=dispatch,
-                             block_engine=block_dispatch)
+                             block_engine=block_dispatch,
+                             scan_engine=scan_dispatch)
         return logits, report
 
     def __call__(self, params: Params, images) -> jnp.ndarray:

@@ -61,15 +61,19 @@ def test_engine_table_covers_every_layer():
     table = cp.engine_table()
     assert set(table) == {l.name for l in MINI.layers}
     assert table["fc"] == "stream_matmul"
-    assert table["stem"] == "conv2d_int8"
-    # the pooling topology nodes are first-class engine bindings too
-    assert table["maxpool"] == "maxpool_int8"
+    # the stem conv + following maxpool fuse into ONE schedulable unit
+    assert table["stem"] == "stem_pool_int8"
+    assert table["maxpool"] == "stem_pool_int8"
+    # the standalone pooling topology node keeps its own engine binding
     assert table["gap"] == "global_avgpool_int8"
     # every residual-block member is bound at BLOCK granularity (the
-    # fused res_block_int8 unit); everything else stays per-layer
+    # fused res_block_int8 unit — or the scanned run engine when the
+    # block sits in a homogeneous run); the stem pair is a unit too
     in_blocks = {m for b in cp.block_assignments for m in b.members}
-    assert in_blocks == set(table) - {"stem", "maxpool", "gap", "fc"}
-    assert all(table[name] == "res_block_int8" for name in in_blocks)
+    assert in_blocks == set(table) - {"gap", "fc"}
+    res_members = in_blocks - {"stem", "maxpool"}
+    assert all(table[name] in ("res_block_int8", "scanned_res_block_int8")
+               for name in res_members)
     # vmem report covers the same layers, all within budget
     report = cp.vmem_report()
     assert set(report) == set(table)
@@ -83,12 +87,15 @@ def test_block_units_bound_and_costed():
     cost is the sum of its members plus the identity buffer plus the
     widest intermediate activation map, and its Eq. 2 words are the
     streamed members' plan analytics."""
-    from repro.configs.cnn import residual_blocks
+    from repro.configs.cnn import residual_blocks, stem_unit
     cp = compiler.compile(MINI, TPU_INTERPRET)
     blocks = {b.name: b for b in residual_blocks(MINI)}
-    assert set(cp.block_table()) == set(blocks)
+    su = stem_unit(MINI)
+    assert set(cp.block_table()) == set(blocks) | {su.name}
     eng = compiler.get_engine("conv2d_int8")
     for ba in cp.block_assignments:
+        if ba.block == su.name:            # the stem pair: costed below
+            continue
         blk = blocks[ba.block]
         assert ba.members == tuple(m.name for m in blk.members)
         scheds = cp.plan.schedules_for(ba.members)
@@ -103,7 +110,11 @@ def test_block_units_bound_and_costed():
     # block_for resolves by block name and by member name
     ba = cp.block_for("s1b0")
     assert ba is not None and cp.block_for("s1b0c1") is ba
-    assert cp.block_for("stem") is None
+    # the stem conv + maxpool pair binds as its own fused unit
+    sa = cp.block_for(su.name)
+    assert sa is not None and sa.engine == "stem_pool_int8"
+    assert sa.members == ("stem", "maxpool")
+    assert cp.block_for("maxpool") is sa
 
 
 def test_block_unit_over_vmem_falls_back_to_per_layer():
@@ -288,7 +299,7 @@ def test_same_name_override_restores_builtin_on_unregister():
     assert isinstance(popped, ShadowEngine)
     assert compiler.get_engine("conv2d_int8") is builtin
     table = compiler.compile(MINI, TPU_INTERPRET).engine_table()
-    assert table["stem"] == "conv2d_int8"
+    assert table["stem"] == "stem_pool_int8"
 
 
 def test_replacement_respects_chain_bandwidth():

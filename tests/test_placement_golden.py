@@ -32,6 +32,7 @@ import pytest
 from repro import compiler
 from repro.compiler import NX2100
 from repro.configs import CNN_CONFIGS
+from repro.configs.cnn import stem_unit
 
 # name -> (n_nodes, [(layer, pc, p_i, p_o), ...] for the offloaded set)
 GOLDEN = {
@@ -56,10 +57,12 @@ GOLDEN = {
 }
 
 # name -> (fused block units, bottleneck units, plan-side Eq. 2 words
-# over all block units per image) at the NX2100 defaults
+# over all block units per image) at the NX2100 defaults.  The unit
+# counts include the fused stem conv+maxpool pair on the ResNet-family
+# nets (8 residual + 1 stem, 16 + 1); VGG's conv-conv stem has no unit.
 GOLDEN_BLOCKS = {
-    "resnet18": (8, 0, 0),
-    "resnet50": (16, 16, 7890554),
+    "resnet18": (9, 0, 0),
+    "resnet50": (17, 16, 7890554),
     "vgg16": (0, 0, 0),
 }
 
@@ -87,11 +90,17 @@ def test_pool_nodes_placed_pinned_on_pool_engines(name):
     table = cp.engine_table()
     pools = [l for l in CNN_CONFIGS[name].layers if l.is_pool]
     assert pools, f"{name} config carries no explicit pool nodes?"
+    su = stem_unit(CNN_CONFIGS[name])
+    stem_pool = su.pool.name if su is not None else None
     for spec in pools:
         sched = cp.plan.schedule_for(spec.name)
         assert not sched.streamed
         assert sched.weight_words_per_image == 0
-        assert table[spec.name] == POOL_ENGINES[spec.kind]
+        if spec.name == stem_pool:
+            # the stem maxpool belongs to the fused stem unit
+            assert table[spec.name] == "stem_pool_int8"
+        else:
+            assert table[spec.name] == POOL_ENGINES[spec.kind]
 
 
 @pytest.mark.parametrize("name", sorted(GOLDEN_BLOCKS))
@@ -109,8 +118,12 @@ def test_fused_block_units_golden(name):
         if sum(1 for m in b.members if not m.endswith("ds")) == 3)
     assert got_bottleneck == n_bottleneck
     assert sum(b.hbm_words_per_image for b in cp.block_assignments) == words
+    su = stem_unit(CNN_CONFIGS[name])
     for b in cp.block_assignments:
-        assert b.engine == "res_block_int8"
+        if su is not None and b.block == su.name:
+            assert b.engine == "stem_pool_int8"
+        else:
+            assert b.engine == "res_block_int8"
         assert b.vmem_bytes <= NX2100.vmem_bytes
 
 

@@ -1,0 +1,357 @@
+"""Scan-over-blocks fused trace: correctness, accounting, atomicity.
+
+Contract under test (configs.homogeneous_block_runs +
+core.detect_scan_groups + the scanned_res_block_int8 engine + compiler
+scan binding + the bounded stage-6 trace cache):
+
+  * scanned execution is BIT-IDENTICAL to the unrolled fused trace
+    (``compile(..., scan=False)``), the eager per-layer walk, and the
+    functional jnp reference — on every executable mini net;
+  * ``mini_mobilenet`` compiles to ZERO scan groups (no residual
+    repetition — the binding never fires where the topology has none);
+  * the scanned trace is genuinely SMALLER: >= 2x fewer jaxpr equations
+    than the unrolled trace on a deep mini-ResNet-50 (the 3x acceptance
+    bar lives in benchmarks/compile_scaling.py on the 16-deep config);
+  * Eq. 2 coverage stays whole: ``eq2_report().verify()`` passes, every
+    member of every scanned block appears in the stats (per-iteration
+    words AND summed), and executed reports equal the template;
+  * partition: a scan group is ATOMIC — no stage cut lands inside one,
+    at any feasible stage count;
+  * the stage-6 trace cache is a bounded LRU with hit/miss/eviction
+    counters, and its fill is ONE critical section: concurrent first
+    runs of the same shape trace exactly once (no lost-race retrace).
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import compiler
+from repro.compiler import TPU_INTERPRET
+from repro.compiler import pipeline as pipeline_mod
+from repro.configs.cnn import (homogeneous_block_runs, mini_mobilenet,
+                               mini_resnet18, mini_resnet50, stem_unit)
+from repro.core.schedule import detect_scan_groups
+from repro.models.cnn import cnn_forward, cnn_input_shape, init_cnn_params
+
+# deep enough for real scan groups, small enough to execute in CI
+DEEP50 = mini_resnet50(hw=16, width=16, stages=2, blocks_per_stage=3)
+
+
+@pytest.fixture(scope="module")
+def deep50():
+    cp = compiler.compile(DEEP50, TPU_INTERPRET)
+    params = init_cnn_params(jax.random.PRNGKey(0), DEEP50)
+    x = jax.random.randint(jax.random.PRNGKey(1),
+                           cnn_input_shape(DEEP50, 2), -127, 128, jnp.int8)
+    return cp, params, x
+
+
+# -- detection ---------------------------------------------------------------
+
+
+def test_homogeneous_runs_and_scan_groups_on_deep_net(deep50):
+    cp, _, _ = deep50
+    runs = homogeneous_block_runs(DEEP50)
+    assert runs, "deep mini-ResNet-50 must have homogeneous block runs"
+    for run in runs:
+        assert len(run) >= 2
+    groups = detect_scan_groups(cp.plan)
+    assert groups
+    for g in groups:
+        # schedule-homogeneous sub-runs of the shape-homogeneous runs
+        assert g.n_blocks >= 2
+        start, stop = g.layer_range
+        names = [l.name for l in DEEP50.layers[start:stop]]
+        assert tuple(names) == g.member_names
+    # ... and the compiler bound at least one of them
+    assert cp.scan_assignments
+    for a in cp.scan_assignments:
+        assert a.engine == "scanned_res_block_int8"
+        assert cp.scan_for(a.blocks[0]) is a
+        assert cp.scan_for(a.member_names[-1]) is a
+
+
+def test_mini_mobilenet_compiles_to_zero_scan_groups():
+    cfg = mini_mobilenet()
+    cp = compiler.compile(cfg, TPU_INTERPRET)
+    assert cp.scan_assignments == ()
+    assert detect_scan_groups(cp.plan) == ()
+
+
+def test_scan_false_compiles_unrolled(deep50):
+    cp, _, _ = deep50
+    cpu = compiler.compile(DEEP50, TPU_INTERPRET, scan=False)
+    assert cp.scan_assignments and not cpu.scan_assignments
+    # member layers keep their block bindings in the unrolled compile
+    for g in cp.scan_assignments:
+        for m in g.member_names:
+            assert cpu.assignment_for(m).scan is None
+            assert cpu.assignment_for(m).engine == "res_block_int8"
+
+
+# -- bit-identity ------------------------------------------------------------
+
+
+def test_scanned_bit_identical_on_deep_resnet50(deep50):
+    """The golden contract: the scan is a compile strategy — scanned
+    fused == unrolled fused == eager == jnp reference, bit for bit."""
+    cp, params, x = deep50
+    assert cp.scan_assignments
+    cpu = compiler.compile(DEEP50, TPU_INTERPRET, scan=False)
+    ref = cnn_forward(params, DEEP50, x)
+    y_scan, rep_scan = cp.run(params, x, backend="fused")
+    y_unrl, _ = cpu.run(params, x, backend="fused")
+    y_eagr, rep_eagr = cp.run(params, x, backend="eager")
+    assert bool(jnp.all(y_scan == y_unrl))
+    assert bool(jnp.all(y_scan == y_eagr))
+    assert bool(jnp.all(y_scan == ref))
+    # reports agree entry-for-entry between backends of the SAME compile
+    assert rep_scan.layers == rep_eagr.layers
+
+
+@pytest.mark.parametrize("cfg", [mini_resnet18(hw=16, width=32),
+                                 mini_resnet50(hw=16, width=16, stages=2),
+                                 mini_mobilenet()],
+                         ids=["mini_resnet18", "mini_resnet50",
+                              "mini_mobilenet"])
+def test_scanned_bit_identical_all_minis(cfg):
+    cp = compiler.compile(cfg, TPU_INTERPRET)
+    cpu = compiler.compile(cfg, TPU_INTERPRET, scan=False)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(1), cnn_input_shape(cfg, 2),
+                           -127, 128, jnp.int8)
+    ref = cnn_forward(params, cfg, x)
+    y_scan, _ = cp.run(params, x, backend="fused")
+    y_unrl, _ = cpu.run(params, x, backend="fused")
+    y_eagr, _ = cp.run(params, x, backend="eager")
+    assert bool(jnp.all(y_scan == y_unrl))
+    assert bool(jnp.all(y_scan == y_eagr))
+    assert bool(jnp.all(y_scan == ref))
+
+
+# -- trace size --------------------------------------------------------------
+
+
+def test_scanned_trace_is_smaller():
+    cfg = mini_resnet50(hw=16, width=16, stages=2, blocks_per_stage=10)
+    cps = compiler.compile(cfg, TPU_INTERPRET)
+    cpu = compiler.compile(cfg, TPU_INTERPRET, scan=False)
+    j_u, _ = compiler.trace_fused_abstract(cpu)
+    j_s, _ = compiler.trace_fused_abstract(cps)
+    n_s = compiler.count_jaxpr_eqns(j_s)
+    n_u = compiler.count_jaxpr_eqns(j_u)
+    assert n_u / n_s >= 2.0, (n_s, n_u)
+
+
+# -- Eq. 2 coverage ----------------------------------------------------------
+
+
+def test_eq2_verify_covers_scanned_groups(deep50):
+    cp, params, x = deep50
+    rep = cp.eq2_report(4).verify()
+    # every member layer of every scanned block is in the template,
+    # reported under the scan engine's name
+    names = {st.name for st in rep.layers}
+    for g in cp.scan_assignments:
+        for m in g.member_names:
+            assert m in names
+    used = rep.engines_used()
+    for g in cp.scan_assignments:
+        for m in g.member_names:
+            assert used[m] == "scanned_res_block_int8"
+    # executed run equals the template exactly (fused AND eager)
+    _, run_rep = cp.run(params, x)
+    assert tuple(run_rep.layers) == cp.stats_template(int(x.shape[0]))
+    run_rep.verify()
+    # engines_used == engine_table over the whole graph
+    assert run_rep.engines_used() == cp.engine_table()
+
+
+def test_scan_rows_report_per_iteration_words(deep50):
+    cp, params, x = deep50
+    _, rep = cp.run(params, x)
+    rows = rep.scan_rows()
+    assert len(rows) == len(cp.scan_assignments)
+    for row, g in zip(rows, cp.scan_assignments):
+        assert len(row["hbm_words_per_block"]) == g.n_blocks
+        assert sum(row["hbm_words_per_block"]) == row["hbm_words"]
+        # per-iteration homogeneity: every block of the run streams the
+        # same words (that is what made it scannable)
+        per = row["plan_hbm_words_per_block"] * rep.images
+        assert all(w == per for w in row["hbm_words_per_block"])
+        assert row["hbm_words"] == g.hbm_words_per_image * rep.images
+
+
+def test_scan_mismatch_hard_fails(deep50):
+    cp, params, x = deep50
+    streamed_scan = [g for g in cp.scan_assignments
+                     if g.hbm_words_per_block > 0]
+    if not streamed_scan:
+        pytest.skip("no streamed scan groups under this placement")
+    _, rep = cp.run(params, x)
+    victim = streamed_scan[0].member_names[0]
+    rep.layers = [st for st in rep.layers if st.name != victim]
+    with pytest.raises(compiler.Eq2MismatchError):
+        rep.verify()
+
+
+# -- partition atomicity -----------------------------------------------------
+
+
+def test_no_stage_cut_lands_inside_a_scan_group(deep50):
+    cp, _, _ = deep50
+    assert cp.scan_assignments
+    from repro.compiler.partition import _atomic_units
+    units = _atomic_units(cp)
+    max_stages = len(units)
+    for n in range(1, max_stages + 1):
+        part = cp.partition(n)
+        cuts = [s.layer_range[0] for s in part.stages[1:]]
+        for g in cp.scan_assignments:
+            start, stop = g.layer_range
+            for c in cuts:
+                assert not (start < c < stop), \
+                    f"stage cut {c} inside scan group {g.group} " \
+                    f"[{start},{stop})"
+        part.verify_eq2()
+
+
+def test_scan_group_is_one_atomic_unit(deep50):
+    cp, _, _ = deep50
+    from repro.compiler.partition import _atomic_units
+    units = _atomic_units(cp)
+    for g in cp.scan_assignments:
+        assert g.layer_range in units
+    # the stem conv+pool unit is atomic too
+    su = stem_unit(DEEP50)
+    names = [l.name for l in DEEP50.layers]
+    stem_range = (names.index(su.conv.name), names.index(su.pool.name) + 1)
+    assert stem_range in units
+
+
+def test_sharded_stage_execution_bit_identical(deep50):
+    """Stage programs over a scanned pipeline still execute the scan
+    groups (layer_range slices never cut one), and chaining the stages
+    reproduces the fused logits bit for bit."""
+    from repro.compiler.partition import stage_forward_fns
+    cp, params, x = deep50
+    part = cp.partition(2)
+    fns = stage_forward_fns(part, interpret=True)
+    h = x
+    for fn in fns:
+        h = fn(params, h)
+    fused, _ = cp.run(params, x)
+    assert bool(jnp.all(h == fused))
+
+
+# -- bounded LRU trace cache -------------------------------------------------
+
+
+def test_trace_cache_lru_eviction_and_counters():
+    cfg = mini_resnet18(hw=8, width=16, stages=2)
+    cp = compiler.compile(cfg, TPU_INTERPRET, trace_cache_size=2)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    xs = [jax.random.randint(jax.random.PRNGKey(b),
+                             cnn_input_shape(cfg, b), -127, 128, jnp.int8)
+          for b in (1, 2, 3)]
+    for x in xs:
+        cp.run(params, x)
+    st = cp.trace_cache_stats()
+    assert st["max_entries"] == 2
+    assert st["entries"] == 2 == cp.trace_count
+    assert st["misses"] == 3
+    assert st["evictions"] == 1          # batch-1 trace (LRU) evicted
+    # warm shape: hit, no eviction
+    cp.run(params, xs[2])
+    st = cp.trace_cache_stats()
+    assert st["hits"] == 1 and st["misses"] == 3 and st["evictions"] == 1
+    # the evicted batch-1 shape retraces (miss), evicting batch-2
+    cp.run(params, xs[0])
+    st = cp.trace_cache_stats()
+    assert st["misses"] == 4 and st["evictions"] == 2
+
+
+def test_trace_cache_stats_surface_in_serving_report():
+    cfg = mini_resnet18(hw=8, width=16, stages=2)
+    cp = compiler.compile(cfg, TPU_INTERPRET)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    with cp.serve(params, microbatch=2) as eng:
+        eng.submit(jax.random.randint(jax.random.PRNGKey(9),
+                                      cnn_input_shape(cfg, 2)[1:],
+                                      -127, 128, jnp.int8)[None]).result()
+        rep = eng.report()
+    assert rep.trace_cache["entries"] >= 1
+    assert rep.trace_cache["max_entries"] == 8
+    assert rep.trace_cache["misses"] >= 1
+
+
+def test_concurrent_first_runs_trace_exactly_once(monkeypatch):
+    """The single-critical-section contract: N threads hitting a COLD
+    pipeline with the same shape produce exactly ONE trace — the old
+    double-checked fill could trace twice and drop one (lost race)."""
+    cfg = mini_resnet18(hw=8, width=16, stages=2)
+    cp = compiler.compile(cfg, TPU_INTERPRET)
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(1), cnn_input_shape(cfg, 2),
+                           -127, 128, jnp.int8)
+
+    calls = []
+    real = pipeline_mod.trace_fused
+    barrier = threading.Barrier(4)
+
+    def counting_trace(*a, **kw):
+        calls.append(threading.get_ident())
+        return real(*a, **kw)
+
+    monkeypatch.setattr(pipeline_mod, "trace_fused", counting_trace)
+
+    outs, errs = [], []
+
+    def worker():
+        try:
+            barrier.wait(timeout=30)
+            outs.append(cp.run(params, x)[0])
+        except Exception as e:                       # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert len(calls) == 1, f"retraced {len(calls)} times"
+    st = cp.trace_cache_stats()
+    assert st["misses"] == 1 and st["hits"] == 3
+    for y in outs[1:]:
+        assert bool(jnp.all(y == outs[0]))
+
+
+# -- stem conv+pool unit -----------------------------------------------------
+
+
+def test_stem_unit_bound_and_bit_identical():
+    cfg = mini_resnet18(hw=16, width=32)
+    cp = compiler.compile(cfg, TPU_INTERPRET)
+    su = stem_unit(cfg)
+    assert su is not None
+    basn = cp.block_for(su.name)
+    assert basn is not None and basn.engine == "stem_pool_int8"
+    assert basn.members == (su.conv.name, su.pool.name)
+    assert cp.engine_table()[su.conv.name] == "stem_pool_int8"
+    assert cp.engine_table()[su.pool.name] == "stem_pool_int8"
+    params = init_cnn_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(1), cnn_input_shape(cfg, 2),
+                           -127, 128, jnp.int8)
+    ref = cnn_forward(params, cfg, x)
+    y, rep = cp.run(params, x)
+    assert bool(jnp.all(y == ref))
+    rep.verify()
+    assert rep.engines_used()[su.conv.name] == "stem_pool_int8"
+
+
+def test_vgg_has_no_stem_unit():
+    from repro.configs.cnn import get_cnn
+    assert stem_unit(get_cnn("vgg16")) is None
