@@ -42,6 +42,14 @@ one gate serves all.
                                wall clock on shared runners — only a
                                gross trace slowdown is a signal).
 
+  * ``admission_wait_fraction`` /
+    ``dispatch_gap_fraction``  may not GROW past the same wide floor
+                               (serving rows: the measured half of the
+                               §VI stall attribution — host wall-clock
+                               shares of the serving wall, so only a
+                               gross structural stall regression is a
+                               signal).
+
 The pipeline wall-clock fields stay ungated (CI noise), and the serving
 throughput gate accepts some flake risk by design: a real >5% serving
 regression is exactly what this file exists to catch.
@@ -92,6 +100,13 @@ GATED_METRICS = {
     # per-metric floor below widens its allowance against CI noise)
     "jaxpr_eqn_count": "up",
     "trace_seconds": "up",
+    # serving stall attribution (ServingReport.bandwidth_efficiency
+    # measured fractions): host wall-clock shares of the serving wall
+    # spent blocked on §V-A credits / starved for work.  Wall-clock on
+    # shared runners, so they gate only past the wide floor below — the
+    # signal is a gross structural stall regression, not noise.
+    "admission_wait_fraction": "up",
+    "dispatch_gap_fraction": "up",
 }
 
 # wall-clock metrics gate with AT LEAST this threshold regardless of
@@ -99,6 +114,8 @@ GATED_METRICS = {
 # a tight 5% gate would flake; only a gross (>50%) slowdown is a signal.
 METRIC_THRESHOLD_FLOOR = {
     "trace_seconds": 0.5,
+    "admission_wait_fraction": 0.5,
+    "dispatch_gap_fraction": 0.5,
 }
 
 

@@ -29,7 +29,13 @@ comparison only, not an FPGA throughput claim; the deterministic
       [--requests N] [--repeats R] [--smoke] [--json BENCH_serving.json]
 
 ``--json`` writes the artifact CI uploads and diffs (bench_diff.py gates
-``serving_images_per_s`` / ``serving_speedup_x`` at >5% regression).
+``serving_images_per_s`` / ``serving_speedup_x`` at >5% regression, and
+the measured ``admission_wait_fraction`` / ``dispatch_gap_fraction``
+stall attribution under the wide wall-clock floor).  ``--trace`` writes
+a Chrome Trace Event JSON of the final closed-loop serving repeat — load
+it at https://ui.perfetto.dev or ``chrome://tracing`` to see admission
+waits, packing, dispatches, in-flight microbatches and deliveries on
+their own tracks.
 """
 from __future__ import annotations
 
@@ -37,7 +43,7 @@ import argparse
 import json
 import statistics
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +52,7 @@ import numpy as np
 from repro import compiler
 from repro.configs.cnn import mini_resnet18
 from repro.models.cnn import cnn_input_shape, init_cnn_params
+from repro.obs import Tracer
 
 MICROBATCH = 16
 CREDITS = 4
@@ -60,11 +67,14 @@ def make_requests(cfg, n_requests: int) -> List[np.ndarray]:
             for i in range(n_requests)]
 
 
-def closed_loop_vs_sequential(cp, params, requests, repeats: int) -> Dict:
+def closed_loop_vs_sequential(cp, params, requests, repeats: int,
+                              tracer: Optional[Tracer] = None) -> Dict:
     """Interleaved pairs: each repeat times the sequential baseline (one
     blocking warm ``run()`` per request, at the request's own batch
     size) then the saturated serving engine over the SAME requests; the
-    speedup is the median of the per-pair ratios."""
+    speedup is the median of the per-pair ratios.  ``tracer`` (optional)
+    records the LAST serving repeat only, so the traced repeat's spans
+    line up with the reported throughput numbers."""
     ex = cp.executor()
     for n in sorted({len(r) for r in requests}):    # warm every shape
         jax.block_until_ready(ex.run(params, jnp.asarray(
@@ -73,13 +83,15 @@ def closed_loop_vs_sequential(cp, params, requests, repeats: int) -> Dict:
         eng.serve(requests[:2])                     # warm the packed shape
     images = sum(len(r) for r in requests)
     seq, srv, ratios, report = [], [], [], None
-    for _ in range(repeats):
+    for rep_i in range(repeats):
         t0 = time.perf_counter()
         for r in requests:
             jax.block_until_ready(ex.run(params, jnp.asarray(r))[0])
         seq.append(images / (time.perf_counter() - t0))
+        kw = {"tracer": tracer} if (
+            tracer is not None and rep_i == repeats - 1) else {}
         with cp.serve(params, microbatch=MICROBATCH,
-                      credits=CREDITS) as eng:
+                      credits=CREDITS, **kw) as eng:
             t0 = time.perf_counter()
             _, report = eng.serve(requests)
             srv.append(images / (time.perf_counter() - t0))
@@ -101,15 +113,20 @@ def open_loop(cp, params, requests, rate_images_per_s: float) -> Dict:
     return {"report": report}
 
 
-def bench(n_requests: int = 32, repeats: int = 3) -> List[Dict]:
+def bench(n_requests: int = 32, repeats: int = 3,
+          tracer: Optional[Tracer] = None) -> List[Dict]:
     cfg = mini_resnet18(hw=8, width=16, stages=4)
     cp = compiler.compile(cfg, compiler.TPU_INTERPRET)
     params = init_cnn_params(jax.random.PRNGKey(0), cfg)
     requests = make_requests(cfg, n_requests)
     images = sum(len(r) for r in requests)
 
-    closed = closed_loop_vs_sequential(cp, params, requests, repeats)
+    closed = closed_loop_vs_sequential(cp, params, requests, repeats,
+                                       tracer)
     rep = closed["report"]
+    measured = rep.bandwidth_efficiency.get("measured", {})
+    # the flat keys are the bench_diff gate surface; everything else
+    # rides in the serialized report (no hand-rolled duplicate dicts)
     rows = [{
         "name": "serving/closed_loop",
         "net": cfg.name,
@@ -117,23 +134,21 @@ def bench(n_requests: int = 32, repeats: int = 3) -> List[Dict]:
         "images": images,
         "microbatch": MICROBATCH,
         "credits": CREDITS,
-        "max_in_flight": rep.max_in_flight,
         "timing_repeats": repeats,
         "serving_images_per_s": round(closed["images_per_s"], 2),
         "sequential_images_per_s": round(
             closed["sequential_images_per_s"], 2),
         "serving_speedup_x": round(closed["speedup"], 2),
-        "p50_ms": round(rep.p50_ms, 2),
-        "p95_ms": round(rep.p95_ms, 2),
-        "p99_ms": round(rep.p99_ms, 2),
-        "pad_fraction": round(rep.pad_fraction, 3),
+        "admission_wait_fraction": round(
+            measured.get("admission_wait_fraction", 0.0), 4),
+        "dispatch_gap_fraction": round(
+            measured.get("dispatch_gap_fraction", 0.0), 4),
         "hbm_words_per_image": rep.hbm_words_per_image,
-        "hbm_words_executed": rep.hbm_words_executed,
+        "report": rep.to_dict(),
     }]
 
     target_rate = 0.6 * closed["images_per_s"]
     orep = open_loop(cp, params, requests, target_rate)["report"]
-    depths = [d for _, d in orep.queue_depth]
     rows.append({
         "name": "serving/open_loop",
         "net": cfg.name,
@@ -141,13 +156,8 @@ def bench(n_requests: int = 32, repeats: int = 3) -> List[Dict]:
         "images": images,
         "offered_images_per_s": round(target_rate, 2),
         "achieved_images_per_s": round(orep.images_per_s, 2),
-        "p50_ms": round(orep.p50_ms, 2),
-        "p95_ms": round(orep.p95_ms, 2),
-        "p99_ms": round(orep.p99_ms, 2),
-        "queue_depth_max": max(depths) if depths else 0,
-        "queue_depth_mean": round(statistics.mean(depths), 2)
-        if depths else 0.0,
         "hbm_words_per_image": orep.hbm_words_per_image,
+        "report": orep.to_dict(),
     })
     return rows
 
@@ -160,14 +170,24 @@ def main() -> None:
                     help="CI-sized run (fewer requests/repeats)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the BENCH_serving.json artifact here")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome Trace Event JSON of the final "
+                         "closed-loop serving repeat (Perfetto loadable)")
     args = ap.parse_args()
     n_requests, repeats = args.requests, args.repeats
     if args.smoke:
         n_requests = min(n_requests, 16)
 
-    rows = bench(n_requests, repeats)
+    tracer = Tracer(process_name="serving_throughput") \
+        if args.trace else None
+    rows = bench(n_requests, repeats, tracer)
     for row in rows:
-        print("  ".join(f"{k}={v}" for k, v in row.items()))
+        print("  ".join(f"{k}={v}" for k, v in row.items()
+                        if k != "report"))
+    if args.trace:
+        tracer.dump(args.trace)
+        print(f"wrote {args.trace} "
+              f"({len(tracer.events())} events, {tracer.dropped} dropped)")
     if args.json:
         artifact = {"benchmark": "serving_throughput", "rows": rows}
         with open(args.json, "w") as f:

@@ -142,6 +142,11 @@ class AutotuneResult:
     evaluations: int = 0
     accepted_moves: int = 0
     word_scale: int = 1
+    #: per-feasible-evaluation search trajectory, ``(iteration,
+    #: objective, best_objective)`` with the greedy seed at iteration 0 —
+    #: the observability record of *how* the annealer got to ``tuned``
+    #: (plotted/asserted without re-running the search).
+    objective_trace: Tuple[Tuple[int, float, float], ...] = ()
 
     @property
     def improved(self) -> bool:
@@ -463,6 +468,7 @@ def autotune_plan(cfg: CNNConfig, target: Target,
             f"infeasible: {'; '.join(cur_ev.violations)}")
     best, best_ev = cur, cur_ev
     accepted = 0
+    trace = [(0, cur_ev.objective, best_ev.objective)]
 
     for i in range(at.iterations):
         cand = model.propose(rng, cur)
@@ -481,6 +487,7 @@ def autotune_plan(cfg: CNNConfig, target: Target,
             accepted += 1
             if ev.objective < best_ev.objective:
                 best, best_ev = cand, ev
+        trace.append((i + 1, ev.objective, best_ev.objective))
 
     return AutotuneResult(
         cfg_name=cfg.name,
@@ -496,4 +503,5 @@ def autotune_plan(cfg: CNNConfig, target: Target,
         evaluations=model.evaluations,
         accepted_moves=accepted,
         word_scale=model.word_scale,
+        objective_trace=tuple(trace),
     )

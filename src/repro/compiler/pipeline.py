@@ -59,6 +59,7 @@ to ``compile()`` adds engine binding and VMEM validation on top.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import threading
@@ -85,6 +86,23 @@ from repro.configs.cnn import (CNNConfig, ResBlockSpec, StemUnitSpec,
 from repro.core import fifo_sim, hbm_model, placement
 from repro.core.schedule import (HBM, PINNED, LayerSchedule, PipelinePlan,
                                  ScanGroup, detect_scan_groups)
+from repro.obs.metrics import default_registry
+
+
+@contextlib.contextmanager
+def _pass_timer(name: str):
+    """Record one compile pass's wall seconds into the process-default
+    metrics registry (``compile_pass_seconds{pass=<name>}``) — the
+    observability counterpart of ``benchmarks/compile_scaling.py``:
+    always on (a clock read plus one histogram insert per compile), so
+    any session can ask where compile time went after the fact."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        default_registry().histogram(
+            "compile_pass_seconds", **{"pass": name}).observe(
+                time.perf_counter() - t0)
 
 
 class CompileError(ValueError):
@@ -515,10 +533,18 @@ class CompiledPipeline:
         so concurrent ``run()``\\ s on one pipeline share a single
         compilation — never a lost-race duplicate trace."""
         key = (tuple(images.shape), str(images.dtype), interpret, act_scale)
-        return self._fused_cache.get_or_create(
-            key, lambda: trace_fused(self, params, images,
-                                     interpret=interpret,
-                                     act_scale=act_scale))
+
+        def _traced():
+            with _pass_timer("trace_fused"):
+                return trace_fused(self, params, images,
+                                   interpret=interpret,
+                                   act_scale=act_scale)
+
+        out = self._fused_cache.get_or_create(key, _traced)
+        reg = default_registry()
+        for k, v in self._fused_cache.stats().items():
+            reg.gauge("compile_trace_cache", counter=k).set(v)
+        return out
 
 
 @dataclass
@@ -674,26 +700,31 @@ class ExecutionReport:
 def plan_pipeline(cfg: CNNConfig, target: Target) -> PipelinePlan:
     """Stages 1-3: parallelism, placement, FIFO sizing — the executable
     :class:`PipelinePlan` (no engine bindings yet)."""
-    plans = placement.allocate_parallelism(cfg, target.tb_budget)
-    plans = placement.hybrid_selection(plans, target.bram_m20ks,
-                                       n_pc=target.n_pc, burst=target.burst)
-    placement.assign_pseudo_channels(plans, n_pc=target.n_pc)
+    with _pass_timer("parallelism"):
+        plans = placement.allocate_parallelism(cfg, target.tb_budget)
+    with _pass_timer("placement"):
+        plans = placement.hybrid_selection(plans, target.bram_m20ks,
+                                           n_pc=target.n_pc,
+                                           burst=target.burst)
+        placement.assign_pseudo_channels(plans, n_pc=target.n_pc)
 
-    laststage = hbm_model.min_laststage_fifo_depth(target.burst)
-    bm_words = hbm_model.burst_matching_fifo_words(target.burst)
-    schedules = tuple(
-        LayerSchedule(
-            spec=p.spec,
-            mode=HBM if p.offload else PINNED,
-            p_i=p.p_i, p_o=p.p_o, pc=p.pc,
-            burst=target.burst,
-            laststage_fifo_depth=laststage,
-            bm_fifo_words=bm_words,
-            n_buffers=target.n_buffers,
-        ) for p in plans)
-    return PipelinePlan(cfg=cfg, schedules=schedules,
-                        placements=tuple(plans), burst=target.burst,
-                        n_pc=target.n_pc)
+    with _pass_timer("fifo_sizing"):
+        laststage = hbm_model.min_laststage_fifo_depth(target.burst)
+        bm_words = hbm_model.burst_matching_fifo_words(target.burst)
+        schedules = tuple(
+            LayerSchedule(
+                spec=p.spec,
+                mode=HBM if p.offload else PINNED,
+                p_i=p.p_i, p_o=p.p_o, pc=p.pc,
+                burst=target.burst,
+                laststage_fifo_depth=laststage,
+                bm_fifo_words=bm_words,
+                n_buffers=target.n_buffers,
+            ) for p in plans)
+        out = PipelinePlan(cfg=cfg, schedules=schedules,
+                           placements=tuple(plans), burst=target.burst,
+                           n_pc=target.n_pc)
+    return out
 
 
 def finalize(plan: PipelinePlan, target: Optional[Target], *,
@@ -1038,10 +1069,14 @@ def compile(cfg: CNNConfig, target: Target = NX2100, *,
     binding) — the differential baseline; ``trace_cache_size`` bounds
     the stage-6 LRU trace cache."""
     if autotune is None or autotune is False:
-        return finalize(plan_pipeline(cfg, target), target, scan=scan,
-                        trace_cache_size=trace_cache_size)
+        plan = plan_pipeline(cfg, target)
+        with _pass_timer("finalize"):
+            return finalize(plan, target, scan=scan,
+                            trace_cache_size=trace_cache_size)
     from repro.compiler.autotune import AutotuneConfig, autotune_plan
     at = AutotuneConfig() if autotune is True else autotune
-    result = autotune_plan(cfg, target, at)
-    return finalize(result.plan, target, replace=False, tuning=result,
-                    scan=scan, trace_cache_size=trace_cache_size)
+    with _pass_timer("autotune"):
+        result = autotune_plan(cfg, target, at)
+    with _pass_timer("finalize"):
+        return finalize(result.plan, target, replace=False, tuning=result,
+                        scan=scan, trace_cache_size=trace_cache_size)

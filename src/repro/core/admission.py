@@ -32,7 +32,9 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Callable, List, Optional
+
+from repro.obs.trace import monotonic_clock
 
 
 class AdmissionError(RuntimeError):
@@ -49,19 +51,31 @@ class AdmissionController:
     ``max_in_flight_seen`` records the high-water mark so tests can
     assert the credit bound held over an entire concurrent run, not just
     at sample points.
+
+    Credit *wait time* is first-class observability: every blocking
+    :meth:`acquire` measures how long the caller sat without a credit on
+    the injectable ``clock`` (default ``time.perf_counter``), summed in
+    ``wait_seconds_total`` with ``blocked_acquires`` counting acquires
+    that had to wait at all — the measured half of the §V-A credit
+    stalls that ``fifo_sim`` models, surfaced by the serving reports'
+    ``bandwidth_efficiency`` section.
     """
 
-    def __init__(self, capacity: int, *, name: str = "admission"):
+    def __init__(self, capacity: int, *, name: str = "admission",
+                 clock: Optional[Callable[[], float]] = None):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         self.name = name
         self.capacity = capacity
+        self.clock = monotonic_clock if clock is None else clock
         self._cv = threading.Condition()
         self._free = capacity
         self._closed = False
         self.max_in_flight_seen = 0
         self.admitted_total = 0
         self.completed_total = 0
+        self.wait_seconds_total = 0.0
+        self.blocked_acquires = 0
 
     # -- credit operations ---------------------------------------------------
 
@@ -85,11 +99,19 @@ class AdmissionController:
 
     def acquire(self, timeout: Optional[float] = None) -> bool:
         """Block until a credit frees (or ``timeout`` elapses / the
-        controller closes).  Returns whether a credit was taken."""
+        controller closes).  Returns whether a credit was taken.  Time
+        spent blocked accrues to ``wait_seconds_total``."""
         with self._cv:
-            if not self._cv.wait_for(
-                    lambda: self._free > 0 or self._closed, timeout):
-                return False
+            if self._free == 0 and not self._closed:
+                # counted BEFORE parking, so a watcher can observe a
+                # blocked dispatcher while it is still blocked
+                self.blocked_acquires += 1
+                t0 = self.clock()
+                ok = self._cv.wait_for(
+                    lambda: self._free > 0 or self._closed, timeout)
+                self.wait_seconds_total += self.clock() - t0
+                if not ok:
+                    return False
             if self._closed:
                 return False
             self._take_locked()

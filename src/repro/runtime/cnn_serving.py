@@ -36,21 +36,28 @@ producers).
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import math
 import queue
 import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import fifo_sim
 from repro.core.admission import AdmissionController, AdmissionError
 from repro.kernels.pallas_compat import resolve_interpret
 from repro.models.cnn import cnn_input_shape
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.stall import stall_attribution
+from repro.obs.trace import NULL_TRACER, monotonic_clock
 
 __all__ = ["CnnRequest", "CnnServingEngine", "MicrobatchPacker",
            "ServingReport"]
@@ -69,11 +76,14 @@ class CnnRequest:
     rows out.  Rows may span microbatches; the result is visible only
     once every row has been delivered."""
 
-    def __init__(self, rid: int, images: np.ndarray):
+    def __init__(self, rid: int, images: np.ndarray,
+                 now: Optional[float] = None):
         self.rid = rid
         self.images = images
         self.n = int(images.shape[0])
-        self.t_submit = time.perf_counter()
+        # the submitting engine passes its injected clock's reading; the
+        # bare-constructor default keeps direct (test) construction easy
+        self.t_submit = time.perf_counter() if now is None else now
         self.t_done: Optional[float] = None
         self.hbm_words = 0            # useful Eq. 2 words (n * words/image)
         self._logits: Optional[np.ndarray] = None
@@ -202,11 +212,30 @@ class ServingReport:
     #: evictions) from ``CompiledPipeline.trace_cache_stats()`` — whether
     #: the serving interval's shape population thrashes the trace bound.
     trace_cache: Dict[str, int] = field(default_factory=dict)
+    #: the engine-local :class:`~repro.obs.metrics.MetricsRegistry`
+    #: snapshot at report time (counters/gauges/histograms).
+    metrics: Dict[str, Any] = field(default_factory=dict)
+    #: measured admission-wait / dispatch-gap fractions laid against the
+    #: ``fifo_sim`` modelled stall cycles
+    #: (:func:`repro.obs.stall.stall_attribution`) — the measured half
+    #: of the §VI bandwidth-efficiency reproduction.
+    bandwidth_efficiency: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def pad_fraction(self) -> float:
         total = self.microbatches * self.microbatch_size
         return self.padded_rows / total if total else 0.0
+
+    @property
+    def effective_images_per_s(self) -> float:
+        """Dispatch-side throughput discounted by padding: the rate
+        microbatch rows left the dispatcher, weighted by the fraction
+        that carried real images — what the pipeline would sustain on
+        perfectly packed input, collapsed to what it delivered."""
+        if self.wall_s <= 0:
+            return 0.0
+        rows_per_s = self.microbatches * self.microbatch_size / self.wall_s
+        return rows_per_s * (1.0 - self.pad_fraction)
 
     def table(self) -> str:
         """Human-readable summary + per-request rows."""
@@ -216,12 +245,34 @@ class ServingReport:
             f"(pad {self.pad_fraction:.0%})  "
             f"in-flight<= {self.max_in_flight}/{self.credits}",
             f"throughput={self.images_per_s:.1f} images/s  "
+            f"effective={self.effective_images_per_s:.1f} images/s "
+            f"(pad-fraction-weighted)  "
             f"latency p50={self.p50_ms:.1f}ms p95={self.p95_ms:.1f}ms "
             f"p99={self.p99_ms:.1f}ms",
             f"Eq.2 words/image={self.hbm_words_per_image}  "
             f"useful={self.hbm_words_useful}  "
             f"executed={self.hbm_words_executed} (incl. padding)",
         ]
+        if self.trace_cache:
+            tc = self.trace_cache
+            head.append(
+                f"trace cache: {tc.get('entries', 0)}/"
+                f"{tc.get('max_entries', 0)} entries  "
+                f"hits={tc.get('hits', 0)} misses={tc.get('misses', 0)} "
+                f"evictions={tc.get('evictions', 0)}")
+        be = self.bandwidth_efficiency
+        if be:
+            m = be.get("measured", {})
+            line = (f"stalls: admission-wait "
+                    f"{m.get('admission_wait_fraction', 0.0):.1%}  "
+                    f"dispatch-gap "
+                    f"{m.get('dispatch_gap_fraction', 0.0):.1%}")
+            mo = be.get("modelled")
+            if mo:
+                line += (f"  modelled {mo.get('stall_fraction', 0.0):.1%} "
+                         f"({mo.get('stall_cycles', 0)}/"
+                         f"{mo.get('cycles', 0)} cycles)")
+            head.append(line)
         hdr = f"{'rid':>5s} {'images':>6s} {'latency_ms':>10s} " \
               f"{'hbm_words':>10s}"
         rows = [hdr, "-" * len(hdr)]
@@ -230,8 +281,89 @@ class ServingReport:
                         f"{r['latency_ms']:>10.2f} {r['hbm_words']:>10d}")
         return "\n".join(head + rows)
 
+    # -- serialization -------------------------------------------------------
 
-class CnnServingEngine:
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-safe dict of every field plus the derived rates the
+        benchmark artifacts want (``pad_fraction``,
+        ``effective_images_per_s``) — the artifact shape
+        ``benchmarks/serving_throughput.py`` embeds directly instead of
+        hand-rolling its own."""
+        out = dataclasses.asdict(self)
+        out["queue_depth"] = [list(q) for q in self.queue_depth]
+        out["pad_fraction"] = self.pad_fraction
+        out["effective_images_per_s"] = self.effective_images_per_s
+        return out
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True, **kw)
+
+    @classmethod
+    def from_json(cls, payload: Union[str, Dict[str, Any]]
+                  ) -> "ServingReport":
+        """Round-trip inverse of :meth:`to_json`/:meth:`to_dict`:
+        ``cls.from_json(rep.to_json()) == rep`` (derived keys are
+        recomputed, JSON's lists restored to the tuple-shaped fields).
+        Works for subclasses (``ShardedServingReport.from_json``)."""
+        data = json.loads(payload) if isinstance(payload, str) \
+            else dict(payload)
+        names = {f.name for f in dataclasses.fields(cls)}
+        data = {k: v for k, v in data.items() if k in names}
+        data["queue_depth"] = [tuple(q) for q in
+                               data.get("queue_depth", [])]
+        for f in dataclasses.fields(cls):
+            # JSON has no tuples: restore tuple-typed fields (the
+            # sharded report's per-stage/per-shard rows)
+            if f.name in data and str(f.type).startswith("Tuple"):
+                data[f.name] = tuple(data[f.name])
+        return cls(**data)
+
+
+class ServingObsMixin:
+    """The observability surface both serving engines share: lazy
+    ``fifo_sim`` modelled stalls, the measured-vs-modelled
+    ``bandwidth_efficiency`` section, and the metrics snapshot with
+    trace-cache gauges.  Expects ``self.compiled`` / ``self.admission`` /
+    ``self.metrics`` / ``self._gap_s``."""
+
+    def _modelled_stalls(self):
+        """The deterministic ``fifo_sim`` side of stall attribution,
+        computed once per engine (plans that stream nothing model as
+        ``None``): ``(outcome, streamed engine names, word_scale)``."""
+        if self._modelled is False:
+            plan = self.compiled.plan
+            try:
+                sim_cfg, scale = plan.sim_config()
+                outcome = fifo_sim.simulate(sim_cfg, "credit")
+                names = tuple(s.spec.name for s in plan.streamed
+                              if s.weight_words_per_row > 0)
+                self._modelled = (outcome, names, scale)
+            except ValueError:
+                self._modelled = None
+        return self._modelled
+
+    def _stall_report(self, wall: float) -> Dict[str, Any]:
+        modelled = self._modelled_stalls()
+        outcome, names, scale = modelled if modelled else (None, (), None)
+        return stall_attribution(
+            wall_s=wall,
+            admission_wait_s=self.admission.wait_seconds_total,
+            dispatch_gap_s=self._gap_s,
+            modelled=outcome, engine_names=names, word_scale=scale)
+
+    def _metrics_snapshot(self) -> Dict[str, Any]:
+        """Engine registry snapshot with the trace-cache counters set as
+        gauges at read time (the cache lives on the pipeline; the
+        gauges make it part of THIS engine's metrics view)."""
+        for k, v in self.compiled.trace_cache_stats().items():
+            self.metrics.gauge("trace_cache", counter=k).set(v)
+        self.metrics.gauge("admission_wait_seconds_total").set(
+            self.admission.wait_seconds_total)
+        self.metrics.gauge("dispatch_gap_seconds_total").set(self._gap_s)
+        return self.metrics.snapshot()
+
+
+class CnnServingEngine(ServingObsMixin):
     """Credit-bounded, double-buffered serving over one compiled pipeline.
 
     ``credits`` is the §V-A in-flight bound: at most that many
@@ -250,7 +382,11 @@ class CnnServingEngine:
 
     def __init__(self, compiled, params, *, microbatch: int = 8,
                  credits: int = 4, queue_depth: int = 64,
-                 interpret: Optional[bool] = None, act_scale: float = 0.05):
+                 interpret: Optional[bool] = None, act_scale: float = 0.05,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 metric_window: int = METRIC_WINDOW,
+                 request_row_window: int = REQUEST_ROW_WINDOW):
         if microbatch <= 0:
             raise ValueError("microbatch must be positive")
         self.compiled = compiled
@@ -260,7 +396,18 @@ class CnnServingEngine:
         if interpret is None and compiled.target is not None:
             interpret = compiled.target.interpret
         self.interpret = resolve_interpret(interpret)
-        self.admission = AdmissionController(credits, name="cnn-serving")
+        # observability: no-op tracer unless one is injected; an
+        # engine-local metrics registry; ONE clock shared by requests,
+        # the tracer, and the admission controller (so a fake clock
+        # makes every latency/percentile path deterministic)
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        if clock is None:
+            clock = self.tracer.clock if self.tracer.enabled \
+                else monotonic_clock
+        self._clock = clock
+        self.admission = AdmissionController(credits, name="cnn-serving",
+                                             clock=clock)
         self._queue: "queue.Queue" = queue.Queue(maxsize=queue_depth)
         self._inflight: "queue.Queue" = queue.Queue()
         self._in_shape = cnn_input_shape(compiled.plan.cfg, microbatch)
@@ -283,15 +430,19 @@ class CnnServingEngine:
         self._accepting = False
         self._rid = 0
         self._outstanding = 0
-        self._latencies: deque = deque(maxlen=METRIC_WINDOW)
-        self._request_rows: deque = deque(maxlen=REQUEST_ROW_WINDOW)
+        self._latencies: deque = deque(maxlen=metric_window)
+        self._request_rows: deque = deque(maxlen=request_row_window)
         self._images_done = 0
         self._requests_done = 0
         self._mb_count = 0
         self._padded_rows = 0
-        self._depth_samples: deque = deque(maxlen=METRIC_WINDOW)
+        self._depth_samples: deque = deque(maxlen=metric_window)
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
+        # stall attribution: dispatcher time spent with nothing to pack
+        # (between dispatches) — admission waits live on the controller
+        self._gap_s = 0.0
+        self._modelled = False        # False = not yet computed (lazy)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -371,11 +522,14 @@ class CnnServingEngine:
         arr = arr.astype(np.int8, copy=False)
         with self._lock:
             self._rid += 1
-            req = CnnRequest(self._rid, arr)
+            req = CnnRequest(self._rid, arr, now=self._clock())
             req.hbm_words = req.n * self.words_per_image
             self._outstanding += 1
             if self._t0 is None:
                 self._t0 = req.t_submit
+        if self.tracer.enabled:
+            self.tracer.begin("request", "request", req.rid, images=req.n)
+        self.metrics.counter("serving_requests_submitted").inc()
         # check-and-enqueue is atomic against stop()'s sentinel, so a
         # racing shutdown either rejects this request or dispatches it —
         # it can never strand it behind the sentinel.  The put is
@@ -418,8 +572,9 @@ class CnnServingEngine:
     # -- reporting -----------------------------------------------------------
 
     def report(self) -> ServingReport:
+        metrics = self._metrics_snapshot()
         with self._lock:
-            lat = sorted(self._latencies)       # most recent METRIC_WINDOW
+            lat = sorted(self._latencies)       # most recent metric window
             n_req = self._requests_done         # exact lifetime counter
             wall = (self._t_last - self._t0) \
                 if (self._t0 is not None and self._t_last is not None) else 0.0
@@ -450,6 +605,8 @@ class CnnServingEngine:
                 queue_depth=list(self._depth_samples),
                 request_rows=list(self._request_rows),
                 trace_cache=self.compiled.trace_cache_stats(),
+                metrics=metrics,
+                bandwidth_efficiency=self._stall_report(wall),
             )
 
     # -- worker threads ------------------------------------------------------
@@ -457,7 +614,14 @@ class CnnServingEngine:
     def _dispatch_loop(self) -> None:
         try:
             while True:
+                # dispatch-gap attribution: time between finishing one
+                # dispatch and holding the next pack is supply starvation
+                # (queue empty), counted only once serving has begun —
+                # the wait for the FIRST request is not a pipeline stall
+                t_idle = self._clock()
                 pack = self._collect_pack()
+                if self._mb_count > 0:
+                    self._gap_s += self._clock() - t_idle
                 if pack is None:
                     break
                 self._dispatch(*pack)
@@ -469,25 +633,47 @@ class CnnServingEngine:
     def _collect_pack(self):
         """One packed microbatch off the host queue (the shared
         :class:`MicrobatchPacker` greedy pad+mask policy)."""
+        if self.tracer.enabled:
+            with self.tracer.span("pack", "pack"):
+                return self._packer.collect()
         return self._packer.collect()
 
     def _dispatch(self, rows, filled: int) -> None:
+        tracer = self.tracer
         buf = np.zeros(self._in_shape, np.int8)      # padded fixed shape
         for req, roff, moff, take in rows:
             buf[moff:moff + take] = req.images[roff:roff + take]
         # the §V-A credit: at most ``credits`` microbatches between here
         # and delivery — blocks the dispatcher, never the device
-        if not self.admission.acquire():
+        # (admission.wait_seconds_total accrues the blocked time)
+        if tracer.enabled:
+            with tracer.span("credit_wait", "admission"):
+                ok = self.admission.acquire()
+        else:
+            ok = self.admission.acquire()
+        if not ok:
             raise AdmissionError("admission controller closed mid-serve")
-        logits = self._trace.fn(self.params, jnp.asarray(buf))
-        t = time.perf_counter()
+        if tracer.enabled:
+            with tracer.span("dispatch", "dispatch", filled=filled):
+                logits = self._trace.fn(self.params, jnp.asarray(buf))
+        else:
+            logits = self._trace.fn(self.params, jnp.asarray(buf))
+        t = self._clock()
         with self._lock:
             self._mb_count += 1
+            seq = self._mb_count
             self._padded_rows += self.microbatch - filled
             depth = self._packer.depth_hint
             self._depth_samples.append(
                 (t - self._t0 if self._t0 else 0.0, depth))
-        self._inflight.put((logits, rows))
+        if tracer.enabled:
+            tracer.begin("microbatch", "in_flight", seq, filled=filled)
+            tracer.counter("queue_depth", depth)
+        self.metrics.counter("serving_microbatches").inc()
+        self.metrics.counter("serving_padded_rows").inc(
+            self.microbatch - filled)
+        self.metrics.gauge("serving_queue_depth").set(depth)
+        self._inflight.put((logits, rows, seq))
 
     def _complete_loop(self) -> None:
         try:
@@ -495,15 +681,25 @@ class CnnServingEngine:
                 item = self._inflight.get()
                 if item is None:
                     break
-                logits, rows = item
+                logits, rows, seq = item
                 arr = np.asarray(jax.block_until_ready(logits))
                 self.admission.release()             # credit back on arrival
-                now = time.perf_counter()
+                now = self._clock()
+                if self.tracer.enabled:
+                    self.tracer.end("microbatch", "in_flight", seq)
                 finished: List[CnnRequest] = []
-                for req, roff, moff, take in rows:
-                    if req._deliver(roff, arr[moff:moff + take], now):
-                        finished.append(req)
+                if self.tracer.enabled:
+                    with self.tracer.span("deliver", "delivery", seq=seq):
+                        for req, roff, moff, take in rows:
+                            if req._deliver(roff, arr[moff:moff + take],
+                                            now):
+                                finished.append(req)
+                else:
+                    for req, roff, moff, take in rows:
+                        if req._deliver(roff, arr[moff:moff + take], now):
+                            finished.append(req)
                 if finished:
+                    lat_hist = self.metrics.histogram("serving_latency_ms")
                     with self._lock:
                         for req in finished:
                             self._latencies.append(req.latency_s)
@@ -517,6 +713,13 @@ class CnnServingEngine:
                         self._t_last = now
                         self._outstanding -= len(finished)
                         self._lock.notify_all()
+                    for req in finished:
+                        lat_hist.observe(1e3 * req.latency_s)
+                        self.metrics.counter("serving_requests_done").inc()
+                        self.metrics.counter(
+                            "serving_images_done").inc(req.n)
+                        if self.tracer.enabled:
+                            self.tracer.end("request", "request", req.rid)
         except BaseException as exc:                 # pragma: no cover
             self._fail(exc)
 

@@ -40,10 +40,9 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -53,9 +52,12 @@ from repro.core.admission import AdmissionController, AdmissionError
 from repro.core.dataflow import staged_pipeline_apply
 from repro.kernels.pallas_compat import resolve_interpret
 from repro.models.cnn import cnn_input_shape
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER, monotonic_clock
 from repro.runtime.cnn_serving import (_STOP, METRIC_WINDOW,
                                        REQUEST_ROW_WINDOW, CnnRequest,
-                                       MicrobatchPacker, ServingReport)
+                                       MicrobatchPacker, ServingObsMixin,
+                                       ServingReport)
 
 __all__ = ["ShardedCnnServingEngine", "ShardedServingReport"]
 
@@ -79,7 +81,7 @@ class ShardedServingReport(ServingReport):
         return self.microbatches / total if total else 0.0
 
 
-class ShardedCnnServingEngine:
+class ShardedCnnServingEngine(ServingObsMixin):
     """Credit-bounded serving over a compiled pipeline partitioned
     across a device mesh (see module docstring).
 
@@ -99,7 +101,11 @@ class ShardedCnnServingEngine:
                  microbatch: int = 4,
                  round_microbatches: Optional[int] = None,
                  credits: Optional[int] = None, queue_depth: int = 64,
-                 interpret: Optional[bool] = None, act_scale: float = 0.05):
+                 interpret: Optional[bool] = None, act_scale: float = 0.05,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 metric_window: int = METRIC_WINDOW,
+                 request_row_window: int = REQUEST_ROW_WINDOW):
         if microbatch <= 0:
             raise ValueError("microbatch must be positive")
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -128,8 +134,15 @@ class ShardedCnnServingEngine:
                 f"credits ({credits}) must cover one full round of "
                 f"{M} microbatches — a smaller bound would deadlock the "
                 f"round dispatcher")
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.metrics = MetricsRegistry() if metrics is None else metrics
+        if clock is None:
+            clock = self.tracer.clock if self.tracer.enabled \
+                else monotonic_clock
+        self._clock = clock
         self.admission = AdmissionController(credits,
-                                             name="sharded-serving")
+                                             name="sharded-serving",
+                                             clock=clock)
         self._in_shape = cnn_input_shape(compiled.plan.cfg, microbatch)
         self._round_shape = (M,) + self._in_shape
         self.words_per_image = sum(
@@ -157,17 +170,21 @@ class ShardedCnnServingEngine:
         self._accepting = False
         self._rid = 0
         self._outstanding = 0
-        self._latencies: deque = deque(maxlen=METRIC_WINDOW)
-        self._request_rows: deque = deque(maxlen=REQUEST_ROW_WINDOW)
+        self._latencies: deque = deque(maxlen=metric_window)
+        self._request_rows: deque = deque(maxlen=request_row_window)
         self._images_done = 0
         self._requests_done = 0
         self._mb_count = 0
         self._round_count = 0
         self._padded_rows = 0
         self._empty_microbatches = 0
-        self._depth_samples: deque = deque(maxlen=METRIC_WINDOW)
+        self._depth_samples: deque = deque(maxlen=metric_window)
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
+        # stall attribution (see ServingObsMixin): round-dispatcher idle
+        # time between rounds; admission waits live on the controller
+        self._gap_s = 0.0
+        self._modelled = False        # False = not yet computed (lazy)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -280,7 +297,7 @@ class ShardedCnnServingEngine:
         arr = arr.astype(np.int8, copy=False)
         with self._lock:
             self._rid += 1
-            req = CnnRequest(self._rid, arr)
+            req = CnnRequest(self._rid, arr, now=self._clock())
             req.hbm_words = req.n * self.words_per_image
             self._outstanding += 1
             if shard is None:
@@ -289,6 +306,11 @@ class ShardedCnnServingEngine:
             self._shard_requests[shard] += 1
             if self._t0 is None:
                 self._t0 = req.t_submit
+        if self.tracer.enabled:
+            self.tracer.begin("request", "request", req.rid,
+                              images=req.n, shard=shard)
+        self.metrics.counter("serving_requests_submitted",
+                             shard=shard).inc()
         with self._submit_lock:
             while True:
                 if not self._accepting:
@@ -330,6 +352,7 @@ class ShardedCnnServingEngine:
 
     def report(self) -> ShardedServingReport:
         import math
+        metrics = self._metrics_snapshot()
         with self._lock:
             lat = sorted(self._latencies)
             wall = (self._t_last - self._t0) \
@@ -360,6 +383,9 @@ class ShardedCnnServingEngine:
                 * self.microbatch * self.words_per_image,
                 queue_depth=list(self._depth_samples),
                 request_rows=list(self._request_rows),
+                trace_cache=self.compiled.trace_cache_stats(),
+                metrics=metrics,
+                bandwidth_efficiency=self._stall_report(wall),
                 n_stages=self.n_stages,
                 rounds=self._round_count,
                 round_microbatches=self.round_microbatches,
@@ -374,7 +400,12 @@ class ShardedCnnServingEngine:
     def _dispatch_loop(self) -> None:
         try:
             while True:
+                # dispatch-gap attribution: time between rounds with
+                # nothing to pack (counted once serving has begun)
+                t_idle = self._clock()
                 packs = self._collect_round()
+                if self._round_count > 0:
+                    self._gap_s += self._clock() - t_idle
                 if packs is None:
                     break
                 self._dispatch_round(packs)
@@ -408,6 +439,12 @@ class ShardedCnnServingEngine:
         take whatever the shards have, never waiting once at least one
         microbatch is held (the packer's latency-over-occupancy policy,
         lifted to rounds).  Short rounds are padded with empty slots."""
+        if self.tracer.enabled:
+            with self.tracer.span("pack", "pack"):
+                return self._collect_round_inner()
+        return self._collect_round_inner()
+
+    def _collect_round_inner(self):
         packs: List[Tuple[list, int]] = []
         while len(packs) < self.round_microbatches:
             got = self._next_pack(block=not packs)
@@ -417,6 +454,7 @@ class ShardedCnnServingEngine:
         return packs or None
 
     def _dispatch_round(self, packs) -> None:
+        tracer = self.tracer
         k = len(packs)
         buf = np.zeros(self._round_shape, np.int8)
         for m, (rows, _filled) in enumerate(packs):
@@ -424,14 +462,27 @@ class ShardedCnnServingEngine:
                 buf[m, moff:moff + take] = req.images[roff:roff + take]
         # the §V-A cross-device credit: one per microbatch between
         # dispatch and delivery, across the whole mesh
-        for _ in range(k):
-            if not self.admission.acquire():
-                raise AdmissionError(
-                    "admission controller closed mid-serve")
-        logits = self._fn(self.params, jnp.asarray(buf))
-        t = time.perf_counter()
+        # (admission.wait_seconds_total accrues the blocked time)
+        if tracer.enabled:
+            with tracer.span("credit_wait", "admission", microbatches=k):
+                for _ in range(k):
+                    if not self.admission.acquire():
+                        raise AdmissionError(
+                            "admission controller closed mid-serve")
+        else:
+            for _ in range(k):
+                if not self.admission.acquire():
+                    raise AdmissionError(
+                        "admission controller closed mid-serve")
+        if tracer.enabled:
+            with tracer.span("dispatch", "dispatch", microbatches=k):
+                logits = self._fn(self.params, jnp.asarray(buf))
+        else:
+            logits = self._fn(self.params, jnp.asarray(buf))
+        t = self._clock()
         with self._lock:
             self._round_count += 1
+            seq = self._round_count
             self._mb_count += k
             self._padded_rows += sum(
                 self.microbatch - filled for _rows, filled in packs)
@@ -439,7 +490,23 @@ class ShardedCnnServingEngine:
             depth = sum(p.depth_hint for p in self._packers)
             self._depth_samples.append(
                 (t - self._t0 if self._t0 else 0.0, depth))
-        self._inflight.put((logits, packs, k))
+        if tracer.enabled:
+            # the sharded in-flight/round view: one async round span plus
+            # a per-stage round annotation (stage programs run inside ONE
+            # staged dispatch, so per-stage host timing does not exist —
+            # the args carry the per-stage plan words instead)
+            tracer.begin("round", "in_flight", seq, microbatches=k)
+            tracer.instant(
+                "stage_round", "round", round=seq, microbatches=k,
+                stage_hbm_words_per_image=[
+                    s.hbm_words_per_image for s in self.partition.stages])
+            tracer.counter("queue_depth", depth)
+        self.metrics.counter("serving_rounds").inc()
+        self.metrics.counter("serving_microbatches").inc(k)
+        self.metrics.counter("serving_empty_microbatches").inc(
+            self.round_microbatches - k)
+        self.metrics.gauge("serving_queue_depth").set(depth)
+        self._inflight.put((logits, packs, k, seq))
 
     def _complete_loop(self) -> None:
         try:
@@ -447,17 +514,29 @@ class ShardedCnnServingEngine:
                 item = self._inflight.get()
                 if item is None:
                     break
-                logits, packs, k = item
+                logits, packs, k, seq = item
                 arr = np.asarray(jax.block_until_ready(logits))
                 self.admission.release(k)
-                now = time.perf_counter()
+                now = self._clock()
+                if self.tracer.enabled:
+                    self.tracer.end("round", "in_flight", seq)
                 finished: List[CnnRequest] = []
-                for m, (rows, _filled) in enumerate(packs):
-                    for req, roff, moff, take in rows:
-                        if req._deliver(roff, arr[m, moff:moff + take],
+                if self.tracer.enabled:
+                    with self.tracer.span("deliver", "delivery", seq=seq):
+                        for m, (rows, _filled) in enumerate(packs):
+                            for req, roff, moff, take in rows:
+                                if req._deliver(
+                                        roff, arr[m, moff:moff + take],
                                         now):
-                            finished.append(req)
+                                    finished.append(req)
+                else:
+                    for m, (rows, _filled) in enumerate(packs):
+                        for req, roff, moff, take in rows:
+                            if req._deliver(roff, arr[m, moff:moff + take],
+                                            now):
+                                finished.append(req)
                 if finished:
+                    lat_hist = self.metrics.histogram("serving_latency_ms")
                     with self._lock:
                         for req in finished:
                             self._latencies.append(req.latency_s)
@@ -471,6 +550,13 @@ class ShardedCnnServingEngine:
                         self._t_last = now
                         self._outstanding -= len(finished)
                         self._lock.notify_all()
+                    for req in finished:
+                        lat_hist.observe(1e3 * req.latency_s)
+                        self.metrics.counter("serving_requests_done").inc()
+                        self.metrics.counter(
+                            "serving_images_done").inc(req.n)
+                        if self.tracer.enabled:
+                            self.tracer.end("request", "request", req.rid)
         except BaseException as exc:                 # pragma: no cover
             self._fail(exc)
 

@@ -1,0 +1,468 @@
+"""Observability: tracing, metrics, stall attribution — the PR-9 surface.
+
+Contract under test (obs/ + the instrumented serving/compiler paths):
+
+  * a traced serving interval exports VALID Chrome Trace Event JSON —
+    non-negative monotone ``ts`` per track, matched async begin/end
+    pairs, and distinct tracks for admission / pack / dispatch /
+    in-flight / delivery — while results stay bit-identical to
+    sequential ``run()``;
+  * ``ServingReport.bandwidth_efficiency`` carries the measured
+    admission-wait / dispatch-gap fractions laid against ``fifo_sim``'s
+    modelled stall cycles, on BOTH executable mini resnets;
+  * everything is bounded for a long-lived server: the tracer ring
+    evicts oldest-first with ``dropped`` counted, metric windows trim,
+    the disabled :data:`NULL_TRACER` records nothing and allocates
+    nothing per call;
+  * reports round-trip through ``to_json``/``from_json`` exactly
+    (including the new metrics / bandwidth_efficiency sections);
+  * the injectable clock makes latency accounting testable with a
+    :class:`ManualClock` instead of sleeps;
+  * ``compile()`` records per-pass wall timings and trace-cache gauges
+    into the default registry; ``autotune_plan`` records its
+    per-iteration objective trajectory.
+"""
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro import compiler
+from repro.compiler import TPU_INTERPRET
+from repro.configs.cnn import mini_resnet18, mini_resnet50
+from repro.core.admission import AdmissionController
+from repro.models.cnn import cnn_input_shape, init_cnn_params
+from repro.obs import (NULL_TRACER, TRACKS, ManualClock, MetricsRegistry,
+                       Tracer, default_registry, stall_attribution,
+                       validate_chrome_trace)
+from repro.obs.metrics import Histogram
+from repro.obs.trace import _NULL_SPAN
+from repro.runtime.cnn_serving import CnnServingEngine, ServingReport
+
+MINI = mini_resnet18(hw=8, width=16, stages=4)
+
+SERVING_TRACKS = ("request", "admission", "pack", "dispatch",
+                  "in_flight", "delivery")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cp = compiler.compile(MINI, TPU_INTERPRET)
+    params = init_cnn_params(jax.random.PRNGKey(0), MINI)
+    return cp, params
+
+
+def _requests(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = cnn_input_shape(cfg, 1)[1:]
+    return [rng.integers(-127, 128, size=(n,) + shape,
+                         dtype=np.int16).astype(np.int8) for n in sizes]
+
+
+# ---------------------------------------------------------------------------
+# tracer unit behavior
+# ---------------------------------------------------------------------------
+
+
+class TestTracer:
+    def test_records_all_phases(self):
+        clk = ManualClock(step=1.0)
+        tr = Tracer(clock=clk)
+        tr.instant("tick", "dispatch", k=1)
+        tr.begin("mb", "in_flight", 7)
+        with tr.span("work", "pack"):
+            pass
+        tr.end("mb", "in_flight", 7)
+        tr.counter("depth", 3)
+        phases = [ev[0] for ev in tr.events()]
+        assert phases == ["i", "b", "X", "e", "C"]
+
+    def test_ring_eviction_bounds_memory(self):
+        tr = Tracer(capacity=8, clock=ManualClock(step=1.0))
+        for i in range(20):
+            tr.instant(f"e{i}")
+        assert len(tr) == 8
+        assert tr.dropped == 12
+        # oldest evicted first: the retained ring is the 8 newest
+        assert [ev[1] for ev in tr.events()] == [f"e{i}"
+                                                for i in range(12, 20)]
+        assert tr.stats() == {"events": 8, "capacity": 8, "dropped": 12}
+
+    def test_capacity_must_be_positive(self):
+        with pytest.raises(ValueError):
+            Tracer(capacity=0)
+
+    def test_chrome_export_rebases_and_names_tracks(self):
+        clk = ManualClock(start=100.0, step=1.0)
+        tr = Tracer(clock=clk, process_name="unit")
+        tr.instant("a", "pack")
+        tr.instant("b", "delivery")
+        trace = tr.to_chrome_trace()
+        assert validate_chrome_trace(trace) == []
+        evs = trace["traceEvents"]
+        meta = [e for e in evs if e["ph"] == "M"]
+        names = {e["args"]["name"] for e in meta
+                 if e["name"] == "thread_name"}
+        assert set(TRACKS) <= names
+        assert any(e["args"]["name"] == "unit" for e in meta
+                   if e["name"] == "process_name")
+        data = [e for e in evs if e["ph"] != "M"]
+        assert data[0]["ts"] == 0.0              # rebased to the first event
+        assert all(e["ts"] >= 0 for e in data)
+
+    def test_cross_thread_push_order_still_validates(self):
+        # ring order is push order; export sorts by timestamp, so an
+        # async end pushed late (completer thread descheduled) cannot
+        # make a track's ts go backwards
+        clk = ManualClock(step=1.0)
+        tr = Tracer(clock=clk)
+        tr.begin("mb", "in_flight", 1)    # t=0
+        t_end = clk()                     # t=1: end HAPPENS now...
+        tr.begin("mb", "in_flight", 2)    # t=2: next begin pushed first
+        tr._push(("e", "mb", "in_flight", t_end, None, 1, None))
+        assert validate_chrome_trace(tr.to_chrome_trace()) == [
+            "async begin without end for ('in_flight', 'mb', 2) (x1)"]
+
+    def test_validator_catches_defects(self):
+        bad = {"traceEvents": [
+            {"ph": "X", "name": "s", "cat": "pack", "ts": -1.0,
+             "dur": 1.0, "pid": 1, "tid": 0},
+            {"ph": "e", "name": "mb", "cat": "in_flight", "ts": 2.0,
+             "id": 9, "pid": 1, "tid": 1},
+        ]}
+        probs = validate_chrome_trace(bad, require_tracks=("delivery",))
+        assert any("bad ts" in p for p in probs)
+        assert any("end without begin" in p for p in probs)
+        assert any("'delivery' has no events" in p for p in probs)
+        assert validate_chrome_trace({}) == \
+            ["traceEvents missing or not a list"]
+
+    def test_null_tracer_records_nothing_and_allocates_nothing(self):
+        assert NULL_TRACER.enabled is False
+        NULL_TRACER.instant("x")
+        NULL_TRACER.begin("x", "in_flight", 1)
+        NULL_TRACER.end("x", "in_flight", 1)
+        NULL_TRACER.counter("x", 1)
+        assert NULL_TRACER.events() == []
+        assert NULL_TRACER.to_chrome_trace()["traceEvents"] == []
+        # span() hands back ONE shared no-op context manager — a
+        # disabled engine pays no per-call allocation
+        assert NULL_TRACER.span("a") is _NULL_SPAN
+        assert NULL_TRACER.span("b", "pack") is NULL_TRACER.span("c")
+
+
+class TestManualClock:
+    def test_step_and_advance(self):
+        clk = ManualClock(start=10.0, step=0.5)
+        assert clk() == 10.0
+        assert clk() == 10.5
+        clk.advance(4.0)
+        assert clk.now == 15.0
+        with pytest.raises(ValueError):
+            clk.advance(-1.0)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_counter_gauge_histogram_snapshot(self):
+        reg = MetricsRegistry()
+        reg.counter("reqs", shard=1).inc()
+        reg.counter("reqs", shard=1).inc(2)
+        reg.gauge("depth").set(7)
+        reg.histogram("lat_ms").observe(3.0)
+        snap = reg.snapshot()
+        assert snap["counters"] == {"reqs{shard=1}": 3.0}
+        assert snap["gauges"] == {"depth": 7.0}
+        h = snap["histograms"]["lat_ms"]
+        assert h["count"] == 1 and h["sum"] == 3.0 and h["p50"] == 3.0
+        assert json.loads(json.dumps(snap)) == snap      # JSON-safe
+
+    def test_same_key_same_instrument(self):
+        reg = MetricsRegistry()
+        assert reg.counter("c", a=1, b=2) is reg.counter("c", b=2, a=1)
+        assert reg.counter("c") is not reg.counter("d")
+
+    def test_counter_rejects_negative(self):
+        with pytest.raises(ValueError):
+            MetricsRegistry().counter("c").inc(-1)
+
+    def test_histogram_window_bounds_memory(self):
+        h = Histogram("h", threading.Lock(), window=4)
+        for v in range(10):
+            h.observe(float(v))
+        assert h.count == 10 and h.sum == 45.0          # exact lifetime
+        assert len(h._window) == 4                      # bounded window
+        assert h.percentile(0.5) == 7.0                 # over 6,7,8,9
+        s = h.summary()
+        assert s["window"] == 4 and s["min"] == 0.0 and s["max"] == 9.0
+
+    def test_default_registry_is_process_wide(self):
+        assert default_registry() is default_registry()
+
+
+# ---------------------------------------------------------------------------
+# stall attribution
+# ---------------------------------------------------------------------------
+
+
+class TestStallAttribution:
+    def test_measured_fractions(self):
+        out = stall_attribution(wall_s=10.0, admission_wait_s=2.5,
+                                dispatch_gap_s=0.5)
+        m = out["measured"]
+        assert m["admission_wait_fraction"] == pytest.approx(0.25)
+        assert m["dispatch_gap_fraction"] == pytest.approx(0.05)
+        assert "modelled" not in out                   # nothing streamed
+
+    def test_zero_wall_is_safe(self):
+        out = stall_attribution(wall_s=0.0, admission_wait_s=1.0,
+                                dispatch_gap_s=1.0)
+        assert out["measured"]["admission_wait_fraction"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# admission controller wait accounting (fake clock, no sleeps)
+# ---------------------------------------------------------------------------
+
+
+class TestAdmissionWaitClock:
+    def test_blocked_acquire_accrues_wait_on_injected_clock(self):
+        clk = ManualClock(step=0.25)
+        ac = AdmissionController(1, clock=clk)
+        assert ac.acquire()
+        assert ac.blocked_acquires == 0                # fast path: no wait
+        done = threading.Event()
+
+        def blocked():
+            assert ac.acquire()                        # parks on the credit
+            done.set()
+
+        t = threading.Thread(target=blocked)
+        t.start()
+        while ac.blocked_acquires == 0 and t.is_alive():
+            pass                                       # waiter has entered
+        ac.release()
+        t.join(5.0)
+        assert done.is_set()
+        assert ac.blocked_acquires == 1
+        assert ac.wait_seconds_total > 0               # clock-step accrual
+        ac.release()
+        ac.assert_quiescent()
+
+    def test_unblocked_acquire_accrues_nothing(self):
+        ac = AdmissionController(2, clock=ManualClock(step=1.0))
+        assert ac.acquire() and ac.acquire()
+        assert ac.wait_seconds_total == 0.0
+        assert ac.blocked_acquires == 0
+        ac.release(2)
+
+
+# ---------------------------------------------------------------------------
+# traced serving: schema, identity, stall report
+# ---------------------------------------------------------------------------
+
+
+class TestTracedServing:
+    def test_trace_is_valid_and_results_bit_identical(self, setup):
+        cp, params = setup
+        reqs = _requests(MINI, [1, 2, 3, 1, 4, 2])
+        tr = Tracer()
+        with cp.serve(params, microbatch=4, credits=2, tracer=tr) as eng:
+            assert eng.tracer is tr
+            outs, rep = eng.serve(reqs)
+        for o, r in zip(outs, reqs):
+            assert np.array_equal(o, np.asarray(cp.run(params, r)[0]))
+        trace = tr.to_chrome_trace()
+        assert validate_chrome_trace(
+            trace, require_tracks=SERVING_TRACKS) == []
+        # every submitted request opened AND closed its async span
+        evs = trace["traceEvents"]
+        begins = [e for e in evs
+                  if e["ph"] == "b" and e["cat"] == "request"]
+        assert len(begins) == len(reqs)
+        assert rep.requests == len(reqs)
+
+    def test_bandwidth_efficiency_on_both_mini_resnets(self, setup):
+        cp18, params18 = setup
+        cfg50 = mini_resnet50(hw=8, width=16, stages=4)
+        cp50 = compiler.compile(cfg50, TPU_INTERPRET)
+        params50 = init_cnn_params(jax.random.PRNGKey(0), cfg50)
+        for cfg, cp, params in ((MINI, cp18, params18),
+                                (cfg50, cp50, params50)):
+            with cp.serve(params, microbatch=4, credits=2) as eng:
+                _, rep = eng.serve(_requests(cfg, [1, 2, 3, 2]))
+            be = rep.bandwidth_efficiency
+            m = be["measured"]
+            assert 0.0 <= m["admission_wait_fraction"] <= 1.0
+            assert 0.0 <= m["dispatch_gap_fraction"] <= 1.0
+            assert be["wall_s"] == rep.wall_s
+            # both mini resnets stream layers, so the modelled side of
+            # the §VI attribution must be present and self-consistent
+            mo = be["modelled"]
+            assert mo["cycles"] > 0
+            assert 0.0 <= mo["stall_fraction"] <= 1.0
+            assert mo["stall_cycles"] <= mo["cycles"]
+            assert set(mo["per_engine_weight_words"]) == {
+                s.spec.name for s in cp.plan.streamed
+                if s.weight_words_per_row > 0}
+
+    def test_metrics_section_counts_match_report(self, setup):
+        cp, params = setup
+        reqs = _requests(MINI, [2, 1, 3])
+        with cp.serve(params, microbatch=4, credits=2) as eng:
+            _, rep = eng.serve(reqs)
+        c = rep.metrics["counters"]
+        assert c["serving_requests_submitted"] == len(reqs)
+        assert c["serving_requests_done"] == len(reqs)
+        assert c["serving_images_done"] == rep.images
+        assert c["serving_microbatches"] == rep.microbatches
+        g = rep.metrics["gauges"]
+        assert g["trace_cache{counter=misses}"] >= 1
+        h = rep.metrics["histograms"]["serving_latency_ms"]
+        assert h["count"] == len(reqs)
+
+    def test_disabled_tracer_by_default(self, setup):
+        cp, params = setup
+        with cp.serve(params, microbatch=4, credits=2) as eng:
+            assert eng.tracer is NULL_TRACER
+            eng.serve(_requests(MINI, [1, 2]))
+        assert NULL_TRACER.events() == []
+
+    def test_manual_clock_serving_is_sleep_free(self, setup):
+        # the engine's injected clock drives request timestamps, the
+        # latency percentiles, and the stall fractions — all computable
+        # with a fake clock, no wall time involved
+        cp, params = setup
+        clk = ManualClock(step=0.001)
+        with cp.serve(params, microbatch=4, credits=2,
+                      clock=clk) as eng:
+            _, rep = eng.serve(_requests(MINI, [1, 2, 2]))
+        assert eng._clock is clk
+        assert rep.wall_s > 0
+        assert rep.p50_ms > 0
+        assert rep.p50_ms <= rep.p95_ms <= rep.p99_ms
+        # every latency is a multiple of the fake step — wall clock
+        # never leaked into the accounting
+        for row in rep.request_rows:
+            ticks = row["latency_ms"] / (1e3 * 0.001)
+            assert ticks == pytest.approx(round(ticks))
+
+    def test_tracer_clock_is_engine_clock(self, setup):
+        cp, params = setup
+        clk = ManualClock(step=0.001)
+        tr = Tracer(clock=clk)
+        eng = CnnServingEngine(cp, params, microbatch=4, credits=2,
+                               tracer=tr)
+        assert eng._clock is clk
+
+
+# ---------------------------------------------------------------------------
+# long-lived-server memory bounds
+# ---------------------------------------------------------------------------
+
+
+class TestServingMemoryBounds:
+    def test_metric_windows_trim(self, setup):
+        cp, params = setup
+        with cp.serve(params, microbatch=2, credits=2, metric_window=4,
+                      request_row_window=3) as eng:
+            _, rep = eng.serve(_requests(MINI, [1] * 10))
+        assert rep.requests == 10                     # exact lifetime total
+        assert rep.images == 10
+        assert len(rep.request_rows) == 3             # bounded window
+        assert len(eng._latencies) == 4
+        assert len(eng._depth_samples) <= 4
+        # the retained rows are the NEWEST
+        assert [r["rid"] for r in rep.request_rows] == [8, 9, 10]
+
+    def test_tracer_ring_bounds_sustained_load(self, setup):
+        cp, params = setup
+        tr = Tracer(capacity=16)
+        with cp.serve(params, microbatch=2, credits=2, tracer=tr) as eng:
+            eng.serve(_requests(MINI, [1] * 12))
+        assert len(tr) <= 16
+        assert tr.dropped > 0                         # it really evicted
+        # a truncated trace still exports (unmatched async pairs are the
+        # validator's business, not a crash)
+        assert tr.to_chrome_trace()["traceEvents"]
+
+
+# ---------------------------------------------------------------------------
+# report serialization
+# ---------------------------------------------------------------------------
+
+
+class TestReportRoundTrip:
+    def test_serving_report_round_trip(self, setup):
+        cp, params = setup
+        with cp.serve(params, microbatch=4, credits=2) as eng:
+            _, rep = eng.serve(_requests(MINI, [1, 3, 2]))
+        assert rep.metrics and rep.bandwidth_efficiency
+        back = ServingReport.from_json(rep.to_json())
+        assert back == rep
+        # derived keys ride in the dict but never break construction
+        d = rep.to_dict()
+        assert d["pad_fraction"] == pytest.approx(rep.pad_fraction)
+        assert d["effective_images_per_s"] == pytest.approx(
+            rep.effective_images_per_s)
+        assert ServingReport.from_json(d) == rep
+
+    def test_table_renders_new_sections(self, setup):
+        cp, params = setup
+        with cp.serve(params, microbatch=4, credits=2) as eng:
+            _, rep = eng.serve(_requests(MINI, [1, 2]))
+        text = rep.table()
+        assert "trace cache:" in text
+        assert "effective=" in text
+        assert "admission-wait" in text and "dispatch-gap" in text
+        assert "modelled" in text
+
+
+# ---------------------------------------------------------------------------
+# compiler + autotune instrumentation
+# ---------------------------------------------------------------------------
+
+
+class TestCompilerMetrics:
+    def test_compile_records_pass_timings(self, setup):
+        # setup compiled MINI, so the default registry must hold every
+        # pass's wall-seconds histogram and the trace-cache gauges
+        snap = default_registry().snapshot()
+        hists = snap["histograms"]
+        for p in ("parallelism", "placement", "fifo_sizing", "finalize"):
+            key = f"compile_pass_seconds{{pass={p}}}"
+            assert key in hists, key
+            assert hists[key]["count"] >= 1
+            assert hists[key]["min"] >= 0.0
+
+    def test_trace_cache_gauges_follow_stats(self, setup):
+        cp, params = setup
+        zeros = np.zeros(cnn_input_shape(MINI, 2), np.int8)
+        cp.run(params, zeros)
+        snap = default_registry().snapshot()
+        stats = cp.trace_cache_stats()
+        g = snap["gauges"]
+        assert g["compile_trace_cache{counter=hits}"] == stats["hits"]
+        assert g["compile_trace_cache{counter=misses}"] == stats["misses"]
+        key = "compile_pass_seconds{pass=trace_fused}"
+        assert snap["histograms"][key]["count"] >= 1
+
+    def test_autotune_objective_trace(self):
+        from repro.compiler.autotune import AutotuneConfig, autotune_plan
+        r = autotune_plan(MINI, TPU_INTERPRET,
+                          AutotuneConfig(seed=0, iterations=40))
+        trace = r.objective_trace
+        assert trace[0][0] == 0                       # greedy seed first
+        assert trace[0][1] == trace[0][2]
+        best = [b for _, _, b in trace]
+        assert best == sorted(best, reverse=True)     # monotone improving
+        assert best[-1] == pytest.approx(r.tuned.objective)
+        # one row per feasible evaluation, iterations 1-indexed after seed
+        assert all(0 <= i <= 40 for i, _, _ in trace)
+        assert all(o >= b for _, o, b in trace)       # best <= visited
