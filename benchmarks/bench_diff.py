@@ -1,10 +1,12 @@
 """Benchmark regression gate: diff two benchmark JSON artifacts.
 
-Works over all five artifact families (``BENCH_pipeline.json`` from
+Works over all six artifact families (``BENCH_pipeline.json`` from
 pipeline_throughput.py, ``BENCH_serving.json`` from
 serving_throughput.py, ``BENCH_autotune.json`` from
 autotune_placement.py, ``BENCH_sharded.json`` from sharded_serving.py,
-``BENCH_compile.json`` from compile_scaling.py): rows are matched on
+``BENCH_compile.json`` from compile_scaling.py,
+``BENCH_multitenant.json`` from multitenant_serving.py): rows are
+matched on
 ``name`` and only the gated metrics *present in a row* are compared, so
 one gate serves all.
 
@@ -49,6 +51,13 @@ one gate serves all.
                                shares of the serving wall, so only a
                                gross structural stall regression is a
                                signal).
+
+  * ``tenant_images_per_s``    may not DROP past the wide floor, and
+  * ``deadline_miss_rate``     may not GROW past it (multitenant rows:
+                               delivered throughput is wall-clock; the
+                               miss rates are pinned to 0.0/1.0 by the
+                               benchmark's extreme deadlines, so any
+                               movement at all is a behavior change).
 
 The pipeline wall-clock fields stay ungated (CI noise), and the serving
 throughput gate accepts some flake risk by design: a real >5% serving
@@ -107,6 +116,14 @@ GATED_METRICS = {
     # signal is a gross structural stall regression, not noise.
     "admission_wait_fraction": "up",
     "dispatch_gap_fraction": "up",
+    # multitenant_serving.py per-tenant rows: delivered throughput is
+    # wall-clock (floor below); the deadline-miss rate is pinned to the
+    # extremes 0.0 / 1.0 by construction (unmeetable vs unmissable
+    # deadlines), so any drift at all is a behavior change — it still
+    # rides the floor only because old==0 -> inf would otherwise trip
+    # on an artifact produced before the row existed.
+    "tenant_images_per_s": "down",
+    "deadline_miss_rate": "up",
 }
 
 # wall-clock metrics gate with AT LEAST this threshold regardless of
@@ -116,6 +133,8 @@ METRIC_THRESHOLD_FLOOR = {
     "trace_seconds": 0.5,
     "admission_wait_fraction": 0.5,
     "dispatch_gap_fraction": 0.5,
+    "tenant_images_per_s": 0.5,
+    "deadline_miss_rate": 0.5,
 }
 
 

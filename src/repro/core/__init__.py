@@ -5,6 +5,7 @@
 # ``build_pipeline_plan`` is a deprecation shim over that compiler.
 from repro.core.admission import (AdmissionController,  # noqa: F401
                                   AdmissionError, AdmissionTrace,
-                                  replay_schedule)
+                                  HeadOfQueue, WeightedFairScheduler,
+                                  jain_fairness, replay_schedule)
 from repro.core.schedule import (HBM, PINNED, LayerSchedule,  # noqa: F401
                                  PipelinePlan, build_pipeline_plan)

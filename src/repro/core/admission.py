@@ -32,7 +32,7 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Any, Callable, Dict, List, Mapping, Optional
 
 from repro.obs.trace import monotonic_clock
 
@@ -262,6 +262,173 @@ def replay_schedule(n_items: int, *, capacity: int,
     if controller is None:
         ctl.assert_quiescent()
     return trace
+
+
+# ---------------------------------------------------------------------------
+# weighted-fair, deadline-aware tenant scheduling (the front-end tier)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HeadOfQueue:
+    """What the scheduler needs to know about one backlogged tenant:
+    the service cost of its head request (images — the currency the
+    weights are fair over) and, optionally, that request's ABSOLUTE
+    deadline on the caller's clock."""
+
+    cost: float
+    deadline: Optional[float] = None
+
+
+class WeightedFairScheduler:
+    """Deficit round-robin over registered tenants, with deadline-aware
+    promotion — the multi-tenant scheduling tier LAYERED OVER the
+    unchanged :class:`AdmissionController` (the §V-A credit invariants
+    and their property tests stay exactly as they are; this class only
+    decides *whose* request is offered to the credit bound next).
+
+    The law, per :meth:`pick` call over the currently backlogged tenants:
+
+      * a tenant whose head request's slack (``deadline - now``) has gone
+        NEGATIVE is promoted immediately, most-overdue first, regardless
+        of weights — its cost is still charged against its deficit (which
+        may go negative), so a tenant cannot use deadlines to escape its
+        long-run weighted share;
+      * otherwise classic DRR: visiting a backlogged tenant grants it
+        ``quantum * weight`` of deficit once per visit; it is served
+        while its deficit covers the head cost, then the cursor moves
+        on.  Long-run delivered cost is proportional to weight for
+        continuously backlogged tenants (property-tested);
+      * a tenant observed with an EMPTY queue has its deficit reset —
+        an idle tenant must not hoard credit and then burst past its
+        share (standard DRR).
+
+    Thread-compatibility: calls are expected from ONE scheduling thread
+    (the front-end dispatcher); the class keeps no locks of its own.
+    """
+
+    def __init__(self, *, quantum: float = 1.0):
+        if quantum <= 0:
+            raise ValueError(f"quantum must be positive, got {quantum}")
+        self.quantum = quantum
+        self._weights: Dict[Any, float] = {}
+        self._deficit: Dict[Any, float] = {}
+        self._ring: List[Any] = []        # registration order
+        self._cursor = 0
+        self._granted = False             # quantum granted at this stop?
+        self.picks: Dict[Any, int] = {}
+        self.served_cost: Dict[Any, float] = {}
+        self.promotions = 0
+
+    # -- registration --------------------------------------------------------
+
+    def register(self, key: Any, weight: float = 1.0) -> None:
+        if weight <= 0:
+            raise ValueError(
+                f"tenant {key!r}: weight must be positive, got {weight}")
+        if key in self._weights:
+            raise ValueError(f"tenant {key!r} already registered")
+        self._weights[key] = float(weight)
+        self._deficit[key] = 0.0
+        self._ring.append(key)
+        self.picks[key] = 0
+        self.served_cost[key] = 0.0
+
+    def unregister(self, key: Any) -> None:
+        if key not in self._weights:
+            raise ValueError(f"tenant {key!r} not registered")
+        at = self._ring.index(key)
+        del self._ring[at]
+        del self._weights[key]
+        del self._deficit[key]
+        if not self._ring:
+            self._cursor = 0
+            self._granted = False
+            return
+        if at < self._cursor:
+            self._cursor -= 1
+        elif at == self._cursor:
+            self._granted = False
+        self._cursor %= len(self._ring)
+
+    @property
+    def tenants(self) -> List[Any]:
+        return list(self._ring)
+
+    def weight(self, key: Any) -> float:
+        return self._weights[key]
+
+    # -- scheduling ----------------------------------------------------------
+
+    def pick(self, backlog: Mapping[Any, HeadOfQueue], *,
+             now: float = 0.0) -> Any:
+        """Choose which backlogged tenant's head request is served next
+        and charge its cost.  ``backlog`` maps registered tenant keys to
+        their :class:`HeadOfQueue`; tenants absent from it are treated
+        as idle (deficit reset).  Raises :class:`ValueError` on an empty
+        or unknown backlog."""
+        if not backlog:
+            raise ValueError("pick() needs at least one backlogged tenant")
+        for key in backlog:
+            if key not in self._weights:
+                raise ValueError(f"tenant {key!r} not registered")
+        # deadline promotion: any head whose slack went negative is
+        # served now, most overdue first (ties: registration order)
+        overdue = sorted(
+            (h.deadline - now, self._ring.index(k), k)
+            for k, h in backlog.items()
+            if h.deadline is not None and h.deadline - now <= 0.0)
+        if overdue:
+            _, _, key = overdue[0]
+            self.promotions += 1
+            self._serve(key, backlog[key].cost)
+            return key
+        # classic DRR from the cursor
+        idle = [k for k in self._ring if k not in backlog]
+        for k in idle:
+            self._deficit[k] = 0.0
+        # each full ring pass grants every backlogged tenant one quantum,
+        # so the loop terminates in <= max(cost / (quantum * weight))
+        # passes; the cap only trips on a pathological cost/quantum ratio
+        for _ in range(1000 * max(1, len(self._ring))):
+            key = self._ring[self._cursor]
+            head = backlog.get(key)
+            if head is None:
+                self._advance()
+                continue
+            if not self._granted:
+                self._deficit[key] += self.quantum * self._weights[key]
+                self._granted = True
+            if self._deficit[key] >= head.cost - 1e-9:
+                self._serve(key, head.cost)
+                return key
+            self._advance()
+        raise RuntimeError(
+            "WeightedFairScheduler.pick did not converge — head cost "
+            "vastly exceeds quantum * weight; raise the quantum")
+
+    def _advance(self) -> None:
+        self._cursor = (self._cursor + 1) % len(self._ring)
+        self._granted = False
+
+    def _serve(self, key: Any, cost: float) -> None:
+        self._deficit[key] -= cost
+        self.picks[key] += 1
+        self.served_cost[key] += cost
+
+
+def jain_fairness(shares: Mapping[Any, float]) -> float:
+    """Jain's fairness index over per-tenant normalized shares
+    (``sum(x)^2 / (n * sum(x^2))``): 1.0 when every share is equal,
+    ``1/n`` when one tenant holds everything.  Used by the front-end
+    report over delivered images/s divided by tenant weight."""
+    xs = [float(v) for v in shares.values()]
+    if not xs:
+        return 1.0
+    sq = sum(x * x for x in xs)
+    if sq == 0.0:
+        return 1.0
+    return (sum(xs) ** 2) / (len(xs) * sq)
 
 
 # ---------------------------------------------------------------------------

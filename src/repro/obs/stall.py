@@ -55,6 +55,15 @@ def stall_attribution(*, wall_s: float, admission_wait_s: float,
     layer order, ``word_scale`` the demand divisor the sim ran under
     (so per-engine words can be rescaled by readers).
 
+    ``engine_names`` must be exactly as long as the sim's per-layer word
+    list — a mismatch means the caller's name order and the sim topology
+    drifted apart, and silently zipping them would misattribute words, so
+    it raises :class:`ValueError` instead.  The per-engine view is
+    emitted as ``per_engine_weight_word_rows`` — a list of
+    ``[name, words]`` pairs that preserves duplicates and sim order —
+    with the ``per_engine_weight_words`` dict kept as a compatibility
+    view (duplicate names collapse there, last row wins).
+
     Both measured fractions are host wall-clock on shared machines —
     they carry meaning as *attribution* (which side of the pipeline
     starved), not as absolute performance, and the benchmark gate treats
@@ -70,8 +79,13 @@ def stall_attribution(*, wall_s: float, admission_wait_s: float,
         },
     }
     if modelled is not None:
-        per_engine = dict(zip(engine_names,
-                              modelled.per_layer_weight_words))
+        words = list(modelled.per_layer_weight_words)
+        if len(engine_names) != len(words):
+            raise ValueError(
+                f"stall_attribution: {len(engine_names)} engine name(s) "
+                f"for {len(words)} per-layer word count(s) — the streamed "
+                f"set and the sim topology drifted apart")
+        rows = [[name, w] for name, w in zip(engine_names, words)]
         out["modelled"] = {
             "stall_cycles": modelled.stall_cycles,
             "cycles": modelled.cycles,
@@ -80,6 +94,9 @@ def stall_attribution(*, wall_s: float, admission_wait_s: float,
             "outputs": modelled.outputs,
             "completed": modelled.completed,
             "word_scale": word_scale,
-            "per_engine_weight_words": per_engine,
+            "per_engine_weight_word_rows": rows,
+            # compat view: duplicate engine names collapse (last wins);
+            # readers that care about order/duplicates use the rows
+            "per_engine_weight_words": dict(rows),
         }
     return out

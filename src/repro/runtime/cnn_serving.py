@@ -60,7 +60,7 @@ from repro.obs.stall import stall_attribution
 from repro.obs.trace import NULL_TRACER, monotonic_clock
 
 __all__ = ["CnnRequest", "CnnServingEngine", "MicrobatchPacker",
-           "ServingReport"]
+           "ServingReport", "restore_tuple_fields"]
 
 _STOP = object()                      # request-queue shutdown sentinel
 
@@ -187,6 +187,33 @@ class MicrobatchPacker:
             self.cursor = None
 
 
+def _deep_tuple(value: Any) -> Any:
+    """Recursively convert lists to tuples (JSON has no tuples, report
+    fields may nest them — per-stage rows of per-shard pairs)."""
+    if isinstance(value, list):
+        return tuple(_deep_tuple(v) for v in value)
+    return value
+
+
+def restore_tuple_fields(cls, payload: Dict[str, Any]) -> Dict[str, Any]:
+    """The report deserialization law shared by every report dataclass
+    (:class:`ServingReport` and its sharded subclass here, the front-end
+    report in :mod:`repro.runtime.frontend`): drop unknown keys (derived
+    values ride in the dict but are never constructor args) and restore
+    tuple-typed fields from JSON's lists — *recursively*, so nested rows
+    round-trip to equality rather than silently decaying to lists one
+    level down."""
+    names = {f.name for f in dataclasses.fields(cls)}
+    data = {k: v for k, v in payload.items() if k in names}
+    for f in dataclasses.fields(cls):
+        # annotations may be strings (``from __future__ import
+        # annotations``) or live typing objects — match both spellings
+        if f.name in data and str(f.type).startswith(
+                ("Tuple", "typing.Tuple", "tuple")):
+            data[f.name] = _deep_tuple(data[f.name])
+    return data
+
+
 @dataclass
 class ServingReport:
     """Aggregate view of one serving interval (see module docstring)."""
@@ -208,6 +235,16 @@ class ServingReport:
     hbm_words_executed: int           # traced words incl. padded rows
     queue_depth: List[Tuple[float, int]] = field(default_factory=list)
     request_rows: List[Dict[str, Any]] = field(default_factory=list)
+    #: total rows dispatched including padding — equals
+    #: ``microbatches * microbatch_size`` under the fixed packed shape,
+    #: less under adaptive sizing (small packs dispatch small shapes).
+    #: 0 on reports from engines predating the field (fixed-shape
+    #: fallback applies).
+    dispatched_rows: int = 0
+    #: adaptive-sizing evidence: packed-shape row count -> dispatches
+    #: (one ``{str(rows): count}`` entry per ladder rung used).  Empty
+    #: for fixed-shape engines.
+    microbatch_shapes: Dict[str, int] = field(default_factory=dict)
     #: stage-6 LRU trace cache counters (entries/max_entries/hits/misses/
     #: evictions) from ``CompiledPipeline.trace_cache_stats()`` — whether
     #: the serving interval's shape population thrashes the trace bound.
@@ -223,7 +260,8 @@ class ServingReport:
 
     @property
     def pad_fraction(self) -> float:
-        total = self.microbatches * self.microbatch_size
+        total = self.dispatched_rows \
+            or self.microbatches * self.microbatch_size
         return self.padded_rows / total if total else 0.0
 
     @property
@@ -234,8 +272,9 @@ class ServingReport:
         perfectly packed input, collapsed to what it delivered."""
         if self.wall_s <= 0:
             return 0.0
-        rows_per_s = self.microbatches * self.microbatch_size / self.wall_s
-        return rows_per_s * (1.0 - self.pad_fraction)
+        total = self.dispatched_rows \
+            or self.microbatches * self.microbatch_size
+        return (total / self.wall_s) * (1.0 - self.pad_fraction)
 
     def table(self) -> str:
         """Human-readable summary + per-request rows."""
@@ -253,6 +292,10 @@ class ServingReport:
             f"useful={self.hbm_words_useful}  "
             f"executed={self.hbm_words_executed} (incl. padding)",
         ]
+        if len(self.microbatch_shapes) > 1:
+            shapes = "  ".join(f"{k}x{v}" for k, v in
+                               self.microbatch_shapes.items())
+            head.append(f"adaptive shapes (rows x dispatches): {shapes}")
         if self.trace_cache:
             tc = self.trace_cache
             head.append(
@@ -303,19 +346,14 @@ class ServingReport:
                   ) -> "ServingReport":
         """Round-trip inverse of :meth:`to_json`/:meth:`to_dict`:
         ``cls.from_json(rep.to_json()) == rep`` (derived keys are
-        recomputed, JSON's lists restored to the tuple-shaped fields).
+        recomputed, JSON's lists restored to the tuple-shaped fields —
+        recursively, so nested per-stage/per-shard row tuples survive).
         Works for subclasses (``ShardedServingReport.from_json``)."""
         data = json.loads(payload) if isinstance(payload, str) \
             else dict(payload)
-        names = {f.name for f in dataclasses.fields(cls)}
-        data = {k: v for k, v in data.items() if k in names}
+        data = restore_tuple_fields(cls, data)
         data["queue_depth"] = [tuple(q) for q in
                                data.get("queue_depth", [])]
-        for f in dataclasses.fields(cls):
-            # JSON has no tuples: restore tuple-typed fields (the
-            # sharded report's per-stage/per-shard rows)
-            if f.name in data and str(f.type).startswith("Tuple"):
-                data[f.name] = tuple(data[f.name])
         return cls(**data)
 
 
@@ -374,6 +412,16 @@ class CnnServingEngine(ServingObsMixin):
     fused-trace cache holds exactly one warm entry however mixed the
     request sizes are.
 
+    ``adaptive=True`` trades that single warm entry for latency under
+    light load: each dispatch packs into the smallest rung of
+    ``microbatch_ladder`` (default: powers of two up to ``microbatch``)
+    that holds the rows actually collected, so a shallow queue dispatches
+    small low-padding shapes and a deep queue grows back to the full
+    ``microbatch``.  The ladder must fit the pipeline's bounded
+    trace-cache LRU (``trace_cache_size``) so every rung stays warm —
+    validated at construction, and the shapes actually used are surfaced
+    as ``ServingReport.microbatch_shapes``.
+
     Use as a context manager (``with cp.serve(params) as eng``) or call
     :meth:`start`/:meth:`stop` explicitly; :meth:`submit` is thread-safe
     (N producers may submit concurrently — the admission invariants are
@@ -383,6 +431,8 @@ class CnnServingEngine(ServingObsMixin):
     def __init__(self, compiled, params, *, microbatch: int = 8,
                  credits: int = 4, queue_depth: int = 64,
                  interpret: Optional[bool] = None, act_scale: float = 0.05,
+                 adaptive: bool = False,
+                 microbatch_ladder: Optional[Sequence[int]] = None,
                  tracer=None, metrics: Optional[MetricsRegistry] = None,
                  clock: Optional[Callable[[], float]] = None,
                  metric_window: int = METRIC_WINDOW,
@@ -393,6 +443,29 @@ class CnnServingEngine(ServingObsMixin):
         self.params = params
         self.microbatch = microbatch
         self.act_scale = act_scale
+        if microbatch_ladder is not None:
+            adaptive = True
+        if adaptive:
+            if microbatch_ladder is None:
+                # powers of two up to the full shape (always included)
+                microbatch_ladder = sorted(
+                    {min(1 << i, microbatch)
+                     for i in range(microbatch.bit_length())}
+                    | {microbatch})
+            ladder = sorted(set(int(r) for r in microbatch_ladder))
+            if not ladder or ladder[0] < 1 or ladder[-1] != microbatch:
+                raise ValueError(
+                    f"microbatch_ladder must be positive sizes topping "
+                    f"out at microbatch={microbatch}, got {ladder}")
+            if len(ladder) > compiled.trace_cache_size:
+                raise ValueError(
+                    f"microbatch_ladder has {len(ladder)} rungs but the "
+                    f"trace cache holds {compiled.trace_cache_size} — "
+                    f"the ladder would thrash its own traces")
+            self.microbatch_ladder: Tuple[int, ...] = tuple(ladder)
+        else:
+            self.microbatch_ladder = (microbatch,)
+        self.adaptive = adaptive
         if interpret is None and compiled.target is not None:
             interpret = compiled.target.interpret
         self.interpret = resolve_interpret(interpret)
@@ -436,6 +509,9 @@ class CnnServingEngine(ServingObsMixin):
         self._requests_done = 0
         self._mb_count = 0
         self._padded_rows = 0
+        self._dispatched_rows = 0
+        self._shape_counts: Dict[int, int] = {}
+        self._rung_traces: Dict[int, Any] = {}
         self._depth_samples: deque = deque(maxlen=metric_window)
         self._t0: Optional[float] = None
         self._t_last: Optional[float] = None
@@ -464,6 +540,7 @@ class CnnServingEngine(ServingObsMixin):
             raise RuntimeError(
                 f"traced Eq. 2 words ({traced}) disagree with the plan "
                 f"({self.words_per_image} words/image x {self.microbatch})")
+        self._rung_traces[self.microbatch] = self._trace
         self._threads = [
             threading.Thread(target=self._dispatch_loop, daemon=True,
                              name="cnn-serving-dispatch"),
@@ -525,11 +602,8 @@ class CnnServingEngine(ServingObsMixin):
             req = CnnRequest(self._rid, arr, now=self._clock())
             req.hbm_words = req.n * self.words_per_image
             self._outstanding += 1
-            if self._t0 is None:
-                self._t0 = req.t_submit
         if self.tracer.enabled:
             self.tracer.begin("request", "request", req.rid, images=req.n)
-        self.metrics.counter("serving_requests_submitted").inc()
         # check-and-enqueue is atomic against stop()'s sentinel, so a
         # racing shutdown either rejects this request or dispatches it —
         # it can never strand it behind the sentinel.  The put is
@@ -546,9 +620,20 @@ class CnnServingEngine(ServingObsMixin):
                     break
                 except queue.Full:
                     continue
+        # the serving interval starts at the first request that actually
+        # ENTERED the queue, and only enqueued requests count as
+        # submitted — a submit() that lost the race against stop() is
+        # rejected above and must skew neither wall_s nor the counter
+        self._count_submitted(req)
         if self._error is not None:
             self._sweep_queues(self._error)
         return req
+
+    def _count_submitted(self, req: CnnRequest) -> None:
+        with self._lock:
+            if self._t0 is None or req.t_submit < self._t0:
+                self._t0 = req.t_submit
+        self.metrics.counter("serving_requests_submitted").inc()
 
     def drain(self, timeout: Optional[float] = None) -> None:
         """Block until every submitted request has been delivered."""
@@ -600,10 +685,13 @@ class CnnServingEngine(ServingObsMixin):
                 p50_ms=pct(0.50), p95_ms=pct(0.95), p99_ms=pct(0.99),
                 hbm_words_per_image=self.words_per_image,
                 hbm_words_useful=images * self.words_per_image,
-                hbm_words_executed=mb * self.microbatch
+                hbm_words_executed=self._dispatched_rows
                 * self.words_per_image,
                 queue_depth=list(self._depth_samples),
                 request_rows=list(self._request_rows),
+                dispatched_rows=self._dispatched_rows,
+                microbatch_shapes={str(k): v for k, v in
+                                   sorted(self._shape_counts.items())},
                 trace_cache=self.compiled.trace_cache_stats(),
                 metrics=metrics,
                 bandwidth_efficiency=self._stall_report(wall),
@@ -638,9 +726,41 @@ class CnnServingEngine(ServingObsMixin):
                 return self._packer.collect()
         return self._packer.collect()
 
+    def _rung_for(self, filled: int) -> int:
+        """Smallest ladder rung holding ``filled`` rows (the adaptive
+        grow/shrink policy: shape follows what the queue supplied)."""
+        for rung in self.microbatch_ladder:
+            if rung >= filled:
+                return rung
+        return self.microbatch
+
+    def _trace_for(self, rung: int):
+        """The fused trace for a ladder rung, Eq. 2-checked on first use
+        (the pipeline's bounded LRU holds the compilation; this dict just
+        skips the cache probe and re-verification on the hot path)."""
+        got = self._rung_traces.get(rung)
+        if got is None:
+            zeros = jnp.zeros((rung,) + self._in_shape[1:], jnp.int8)
+            got = self.compiled.fused_trace(
+                self.params, zeros, interpret=self.interpret,
+                act_scale=self.act_scale)
+            traced = sum(st.hbm_words for st in got.stats)
+            if traced != self.words_per_image * rung:
+                raise RuntimeError(
+                    f"traced Eq. 2 words ({traced}) disagree with the "
+                    f"plan ({self.words_per_image} words/image x {rung})")
+            self._rung_traces[rung] = got
+        return got
+
     def _dispatch(self, rows, filled: int) -> None:
         tracer = self.tracer
-        buf = np.zeros(self._in_shape, np.int8)      # padded fixed shape
+        # padded packed shape: the one fixed microbatch, or (adaptive)
+        # the smallest warm ladder rung the collected rows fit in
+        shape_rows = self._rung_for(filled) if self.adaptive \
+            else self.microbatch
+        trace = self._trace if shape_rows == self.microbatch \
+            else self._trace_for(shape_rows)
+        buf = np.zeros((shape_rows,) + self._in_shape[1:], np.int8)
         for req, roff, moff, take in rows:
             buf[moff:moff + take] = req.images[roff:roff + take]
         # the §V-A credit: at most ``credits`` microbatches between here
@@ -654,24 +774,31 @@ class CnnServingEngine(ServingObsMixin):
         if not ok:
             raise AdmissionError("admission controller closed mid-serve")
         if tracer.enabled:
-            with tracer.span("dispatch", "dispatch", filled=filled):
-                logits = self._trace.fn(self.params, jnp.asarray(buf))
+            with tracer.span("dispatch", "dispatch", filled=filled,
+                             shape_rows=shape_rows):
+                logits = trace.fn(self.params, jnp.asarray(buf))
         else:
-            logits = self._trace.fn(self.params, jnp.asarray(buf))
+            logits = trace.fn(self.params, jnp.asarray(buf))
         t = self._clock()
         with self._lock:
             self._mb_count += 1
             seq = self._mb_count
-            self._padded_rows += self.microbatch - filled
+            self._padded_rows += shape_rows - filled
+            self._dispatched_rows += shape_rows
+            self._shape_counts[shape_rows] = \
+                self._shape_counts.get(shape_rows, 0) + 1
             depth = self._packer.depth_hint
+            # rebase on `is not None`: an injected clock legitimately
+            # starts at 0.0, and 0.0 is falsy — truthiness here silently
+            # broke the first engine's sample timestamps
             self._depth_samples.append(
-                (t - self._t0 if self._t0 else 0.0, depth))
+                (t - self._t0 if self._t0 is not None else 0.0, depth))
         if tracer.enabled:
             tracer.begin("microbatch", "in_flight", seq, filled=filled)
             tracer.counter("queue_depth", depth)
         self.metrics.counter("serving_microbatches").inc()
         self.metrics.counter("serving_padded_rows").inc(
-            self.microbatch - filled)
+            shape_rows - filled)
         self.metrics.gauge("serving_queue_depth").set(depth)
         self._inflight.put((logits, rows, seq))
 
@@ -724,10 +851,17 @@ class CnnServingEngine(ServingObsMixin):
             self._fail(exc)
 
     def _reject(self, req: CnnRequest) -> None:
-        """Back out a request that was counted but never enqueued."""
+        """Back out a request that never entered the queue: the
+        outstanding count reverts, and because ``_t0`` / the submitted
+        counter are only advanced post-enqueue (:meth:`_count_submitted`)
+        there is nothing else to unwind — a rejected request leaves
+        ``wall_s`` and ``serving_requests_submitted`` untouched.  The
+        request's trace span is closed so the export stays matched."""
         with self._lock:
             self._outstanding -= 1
             self._lock.notify_all()
+        if self.tracer.enabled:
+            self.tracer.end("request", "request", req.rid, rejected=True)
 
     def _fail(self, exc: BaseException) -> None:
         """Fail every queued and in-flight request, wake all waiters."""

@@ -303,14 +303,9 @@ class ShardedCnnServingEngine(ServingObsMixin):
             if shard is None:
                 shard = self._rr_submit % self.n_stages
                 self._rr_submit += 1
-            self._shard_requests[shard] += 1
-            if self._t0 is None:
-                self._t0 = req.t_submit
         if self.tracer.enabled:
             self.tracer.begin("request", "request", req.rid,
                               images=req.n, shard=shard)
-        self.metrics.counter("serving_requests_submitted",
-                             shard=shard).inc()
         with self._submit_lock:
             while True:
                 if not self._accepting:
@@ -322,6 +317,16 @@ class ShardedCnnServingEngine(ServingObsMixin):
                     break
                 except queue.Full:
                     continue
+        # only requests that actually entered a shard queue advance the
+        # serving clock and the submitted counters (mirrors
+        # CnnServingEngine: a submit() that lost the race against stop()
+        # must skew neither wall_s nor the per-shard accounting)
+        with self._lock:
+            self._shard_requests[shard] += 1
+            if self._t0 is None or req.t_submit < self._t0:
+                self._t0 = req.t_submit
+        self.metrics.counter("serving_requests_submitted",
+                             shard=shard).inc()
         with self._work:
             self._work.notify_all()
         if self._error is not None:
@@ -383,6 +388,10 @@ class ShardedCnnServingEngine(ServingObsMixin):
                 * self.microbatch * self.words_per_image,
                 queue_depth=list(self._depth_samples),
                 request_rows=list(self._request_rows),
+                dispatched_rows=(self._mb_count + self._empty_microbatches)
+                * self.microbatch,
+                microbatch_shapes={str(self.microbatch): self._mb_count}
+                if self._mb_count else {},
                 trace_cache=self.compiled.trace_cache_stats(),
                 metrics=metrics,
                 bandwidth_efficiency=self._stall_report(wall),
@@ -488,8 +497,10 @@ class ShardedCnnServingEngine(ServingObsMixin):
                 self.microbatch - filled for _rows, filled in packs)
             self._empty_microbatches += self.round_microbatches - k
             depth = sum(p.depth_hint for p in self._packers)
+            # rebase on `is not None` (an injected clock can start at
+            # 0.0) — mirrors the CnnServingEngine depth-sampling fix
             self._depth_samples.append(
-                (t - self._t0 if self._t0 else 0.0, depth))
+                (t - self._t0 if self._t0 is not None else 0.0, depth))
         if tracer.enabled:
             # the sharded in-flight/round view: one async round span plus
             # a per-stage round annotation (stage programs run inside ONE
@@ -563,9 +574,14 @@ class ShardedCnnServingEngine(ServingObsMixin):
     # -- failure plumbing (mirrors CnnServingEngine) -------------------------
 
     def _reject(self, req: CnnRequest) -> None:
+        """Back out a request that never entered a shard queue (wall_s,
+        shard counts and the submitted counter were not yet advanced —
+        they move post-enqueue); close its trace span."""
         with self._lock:
             self._outstanding -= 1
             self._lock.notify_all()
+        if self.tracer.enabled:
+            self.tracer.end("request", "request", req.rid, rejected=True)
 
     def _fail(self, exc: BaseException) -> None:
         self._accepting = False

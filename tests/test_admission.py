@@ -213,3 +213,119 @@ def test_staged_replay_through_caller_controller():
     ctl.assert_quiescent()
     with pytest.raises(ValueError, match="n_stages"):
         replay_staged_schedule(1, n_stages=0)
+
+
+# ---------------------------------------------------------------------------
+# weighted-fair tenant scheduling (the front-end tier over the law)
+# ---------------------------------------------------------------------------
+
+from repro.core.admission import (HeadOfQueue, WeightedFairScheduler,
+                                  jain_fairness)
+
+
+def test_wfs_registration_and_validation():
+    s = WeightedFairScheduler()
+    with pytest.raises(ValueError, match="quantum"):
+        WeightedFairScheduler(quantum=0.0)
+    s.register("a", 2.0)
+    with pytest.raises(ValueError, match="already"):
+        s.register("a")
+    with pytest.raises(ValueError, match="weight"):
+        s.register("b", 0.0)
+    with pytest.raises(ValueError, match="at least one"):
+        s.pick({})
+    with pytest.raises(ValueError, match="not registered"):
+        s.pick({"ghost": HeadOfQueue(1.0)})
+    with pytest.raises(ValueError, match="not registered"):
+        s.unregister("ghost")
+    assert s.tenants == ["a"] and s.weight("a") == 2.0
+    s.unregister("a")
+    assert s.tenants == []
+
+
+@settings(max_examples=40, deadline=None)
+@given(weights=st.lists(st.integers(1, 8), min_size=2, max_size=5),
+       rounds=st.integers(50, 300))
+def test_wfs_long_run_shares_track_weights(weights, rounds):
+    """DRR law: for continuously backlogged tenants with unit-cost
+    heads, delivered counts are weight-proportional to within one
+    quantum per tenant per ring cycle."""
+    s = WeightedFairScheduler()
+    for i, w in enumerate(weights):
+        s.register(i, float(w))
+    backlog = {i: HeadOfQueue(1.0) for i in range(len(weights))}
+    n = rounds * sum(weights)
+    for _ in range(n):
+        s.pick(backlog)
+    assert sum(s.picks.values()) == n
+    for i, w in enumerate(weights):
+        want = n * w / sum(weights)
+        # the deficit mechanism bounds the deviation by one cycle's
+        # grant — generous slack here, exactness is not the law
+        assert abs(s.picks[i] - want) <= sum(weights) + 1
+
+
+def test_wfs_deadline_promotion_charges_deficit():
+    s = WeightedFairScheduler()
+    s.register("heavy", 8.0)
+    s.register("urgent", 0.5)
+    backlog = {"heavy": HeadOfQueue(1.0),
+               "urgent": HeadOfQueue(1.0, deadline=5.0)}
+    # slack still positive: normal DRR order (heavy first, weight 8)
+    assert s.pick(backlog, now=0.0) == "heavy"
+    assert s.promotions == 0
+    # slack negative: urgent jumps the line regardless of weight...
+    assert s.pick(backlog, now=6.0) == "urgent"
+    assert s.promotions == 1
+    # ...and the cost was charged — its deficit went negative, so the
+    # promotion is NOT a way to escape the long-run weighted share
+    assert s._deficit["urgent"] < 0.0
+    # most-overdue-first among several negative slacks
+    b2 = {"heavy": HeadOfQueue(1.0, deadline=4.0),
+          "urgent": HeadOfQueue(1.0, deadline=1.0)}
+    assert s.pick(b2, now=10.0) == "urgent"
+    assert s.promotions == 2
+
+
+def test_wfs_idle_tenant_deficit_resets():
+    """Standard DRR: a tenant observed idle must not hoard deficit and
+    burst past its share when it returns."""
+    s = WeightedFairScheduler()
+    s.register("a", 1.0)
+    s.register("b", 1.0)
+    # b idle: a is served repeatedly while b's deficit is reset each call
+    for _ in range(10):
+        assert s.pick({"a": HeadOfQueue(1.0)}) == "a"
+    assert s._deficit["b"] == 0.0
+    # b returns: it gets its fair alternation, not a 10-pick burst
+    backlog = {"a": HeadOfQueue(1.0), "b": HeadOfQueue(1.0)}
+    picks = [s.pick(backlog) for _ in range(10)]
+    assert 4 <= picks.count("b") <= 6
+
+
+def test_wfs_unregister_mid_rotation_keeps_cursor_sane():
+    s = WeightedFairScheduler()
+    for k in ("a", "b", "c"):
+        s.register(k)
+    s.pick({"c": HeadOfQueue(1.0)})         # cursor parked at c
+    s.unregister("a")                        # removal BEFORE the cursor
+    # remaining tenants still alternate fairly
+    backlog = {"b": HeadOfQueue(1.0), "c": HeadOfQueue(1.0)}
+    picks = [s.pick(backlog) for _ in range(8)]
+    assert 3 <= picks.count("b") <= 5
+
+
+def test_wfs_nonconvergence_guard():
+    s = WeightedFairScheduler(quantum=1e-12)
+    s.register("a", 1.0)
+    with pytest.raises(RuntimeError, match="converge"):
+        s.pick({"a": HeadOfQueue(1e12)})
+
+
+def test_jain_fairness_index():
+    assert jain_fairness({}) == 1.0
+    assert jain_fairness({"a": 5.0, "b": 5.0}) == pytest.approx(1.0)
+    assert jain_fairness({"a": 1.0, "b": 0.0}) == pytest.approx(0.5)
+    got = jain_fairness({"a": 1.0, "b": 1.0, "c": 1.0, "d": 0.0})
+    assert got == pytest.approx(0.75)
+    assert jain_fairness({"a": 0.0}) == 1.0

@@ -196,3 +196,170 @@ def test_compiled_pipeline_serve_entry_point(setup):
     with eng:
         res, report = eng.serve(_requests([1, 2]))
     assert len(res) == 2 and report.images == 3
+
+
+# ---------------------------------------------------------------------------
+# serving-clock regressions (pinned bugs: truthiness rebase, submit/stop
+# race accounting) and the adaptive microbatch ladder
+# ---------------------------------------------------------------------------
+
+
+class _FlippableClock:
+    """Monotone fake clock whose step can be changed mid-run: step 0.0
+    parks time exactly at ``start`` (so the FIRST request's t_submit —
+    and with it the engine's ``_t0`` — is exactly 0.0), then a positive
+    step lets time advance for later events."""
+
+    def __init__(self, start=0.0, step=0.0):
+        self.t = float(start)
+        self.step = float(step)
+        self._lock = threading.Lock()
+
+    def __call__(self):
+        with self._lock:
+            t = self.t
+            self.t += self.step
+            return t
+
+
+def test_depth_samples_rebase_with_clock_starting_at_zero(setup):
+    """Regression pin: ``_dispatch`` rebased depth-sample timestamps
+    with ``t - self._t0 if self._t0 else 0.0`` — truthiness, not an
+    ``is not None`` check — so an injected clock that legitimately
+    reads 0.0 at the first submit froze EVERY sample timestamp at 0.0.
+    With the fix, samples taken after time advances carry positive
+    rebased timestamps."""
+    cp, params = setup
+    clk = _FlippableClock(start=0.0, step=0.0)
+    with cp.serve(params, microbatch=2, credits=2, clock=clk) as eng:
+        first = eng.submit(_requests([1])[0])
+        first.result(timeout=60)
+        assert eng._t0 == 0.0                # the falsy-_t0 trigger
+        clk.step = 0.001                     # now let time advance
+        _, rep = eng.serve(_requests([1, 2, 1], seed=3))
+    assert rep.queue_depth                   # samples were taken
+    # every sample is rebased (never a raw clock reading from a clock
+    # that only moved forward), and at least one post-advance sample
+    # carries a REAL positive offset — all-zero means the rebase
+    # silently collapsed, the exact pinned bug
+    assert all(ts >= 0.0 for ts, _ in rep.queue_depth)
+    assert any(ts > 0.0 for ts, _ in rep.queue_depth)
+
+
+def test_submit_losing_race_to_stop_leaves_accounting_clean(setup):
+    """Regression pin: a submit() that loses the race against stop()
+    used to set ``_t0`` and bump ``serving_requests_submitted`` for a
+    request ``_reject()`` then threw away — skewing wall_s and the
+    counter.  Only requests that actually ENTER the queue may count."""
+    cp, params = setup
+    eng = cp.serve(params, microbatch=2, credits=2)
+    eng.start()
+    try:
+        eng._accepting = False               # stop() won the race
+        with pytest.raises(RuntimeError, match="stopping"):
+            eng.submit(_requests([1])[0])
+        assert eng._t0 is None               # wall clock never started
+        counters = eng.metrics.snapshot()["counters"]
+        assert counters.get("serving_requests_submitted", 0) == 0
+        # the engine is still fully serviceable once accepting again
+        eng._accepting = True
+        batches = _requests([1, 2], seed=7)
+        outs, rep = eng.serve(batches)
+        for got, want in zip(outs, _reference_rows(cp, params, batches)):
+            assert np.array_equal(got, want)
+        assert rep.requests == 2
+        counters = eng.metrics.snapshot()["counters"]
+        assert counters["serving_requests_submitted"] == 2
+    finally:
+        eng.stop()
+    eng.admission.assert_quiescent()
+
+
+def test_adaptive_ladder_validation(setup):
+    cp, params = setup
+    with pytest.raises(ValueError, match="topping"):
+        CnnServingEngine(cp, params, microbatch=4,
+                         microbatch_ladder=[1, 2])      # doesn't reach 4
+    with pytest.raises(ValueError, match="topping"):
+        CnnServingEngine(cp, params, microbatch=4,
+                         microbatch_ladder=[0, 4])      # non-positive rung
+    # default power-of-two ladder for microbatch=1024 has 11 rungs —
+    # more than the stage-6 trace cache holds; the ctor must refuse
+    # rather than let the ladder thrash its own traces
+    assert cp.trace_cache_size < 11
+    with pytest.raises(ValueError, match="trace cache"):
+        CnnServingEngine(cp, params, microbatch=1024, adaptive=True)
+    # fixed-shape engines keep the single-rung ladder
+    eng = CnnServingEngine(cp, params, microbatch=4)
+    assert eng.microbatch_ladder == (4,) and not eng.adaptive
+    # passing a ladder implies adaptive
+    eng = CnnServingEngine(cp, params, microbatch=4,
+                           microbatch_ladder=[1, 4])
+    assert eng.adaptive and eng.microbatch_ladder == (1, 4)
+
+
+def test_adaptive_shapes_follow_queue_depth(setup):
+    """Light load dispatches the smallest fitting rung (low padding),
+    a burst grows back to the full microbatch — and every shape stays
+    inside the pipeline's bounded trace cache, bit-identical."""
+    cp, params = setup
+    with cp.serve(params, microbatch=4, credits=2, adaptive=True) as eng:
+        assert eng.microbatch_ladder == (1, 2, 4)
+        # strictly closed-loop singles (wait before the next submit, so
+        # the packer sees exactly 1 row): the smallest rung each time
+        singles = _requests([1, 1, 1], seed=11)
+        single_reqs = []
+        for b in singles:
+            r = eng.submit(b)
+            r.result(timeout=60)
+            single_reqs.append(r)
+        # a burst wider than the top rung: full-shape dispatches
+        burst = _requests([8], seed=12)
+        outs, rep = eng.serve(burst)
+    shapes = rep.microbatch_shapes
+    assert shapes.get("1", 0) >= 3           # singles used the small rung
+    assert shapes.get("4", 0) >= 2           # the 8-row burst used 4+4
+    # executed-word accounting follows the shapes actually dispatched
+    assert rep.dispatched_rows == sum(
+        int(k) * v for k, v in shapes.items())
+    assert rep.hbm_words_executed == \
+        rep.dispatched_rows * rep.hbm_words_per_image
+    assert rep.padded_rows == rep.dispatched_rows - rep.images
+    # bit-identity is untouched by shape changes
+    for got, want in zip([r.result() for r in single_reqs],
+                         _reference_rows(cp, params, singles)):
+        assert np.array_equal(got, want)
+    assert np.array_equal(outs[0],
+                          _reference_rows(cp, params, burst)[0])
+    # the rung population fits the bounded LRU — no eviction thrash
+    tc = rep.trace_cache
+    assert tc["entries"] <= tc["max_entries"]
+
+
+def test_restore_tuple_fields_deep_nesting():
+    """The shared deserialization law restores tuple-typed fields
+    RECURSIVELY: nested rows (tuples of tuples, as the sharded and
+    front-end reports carry) must round-trip to equality, not decay to
+    lists one level down."""
+    import dataclasses as dc
+    import json
+    from typing import Dict, Tuple
+
+    from repro.runtime.cnn_serving import restore_tuple_fields
+
+    @dc.dataclass
+    class Nested:
+        rows: Tuple[Tuple[int, ...], ...] = ()
+        pairs: Tuple[Tuple[str, int], ...] = ()
+        plain: Dict[str, int] = dc.field(default_factory=dict)
+
+    orig = Nested(rows=((1, 2), (3,)), pairs=(("a", 1), ("b", 2)),
+                  plain={"x": 1})
+    payload = json.loads(json.dumps(dc.asdict(orig)))
+    back = Nested(**restore_tuple_fields(Nested, payload))
+    assert back == orig
+    assert isinstance(back.rows[0], tuple)       # deep, not shallow
+    assert isinstance(back.pairs[1], tuple)
+    # unknown (derived) keys are dropped, not passed to the ctor
+    payload["derived_rate"] = 123.0
+    assert Nested(**restore_tuple_fields(Nested, payload)) == orig

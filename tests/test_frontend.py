@@ -1,0 +1,317 @@
+"""Multi-tenant multi-network serving front-end: one admission door
+over several running engines.
+
+Contract under test (runtime/frontend.py + core/admission.py's
+WeightedFairScheduler over the UNCHANGED AdmissionController):
+
+  * mixed three-network traffic (mini ResNet-18 + ResNet-50 +
+    MobileNet), closed- AND open-loop, is BIT-IDENTICAL per request to
+    each network's sequential ``run()`` — weighted-fair scheduling and
+    deadline promotion reorder service, never an output bit;
+  * the front-end-wide credit bound (``max_outstanding``) holds under
+    concurrent multi-tenant producers, asserted through the admission
+    controller's invariant hooks (high-water mark, conservation,
+    quiescence) — and each engine's own §V-A controller stays
+    quiescent too;
+  * under sustained backlog, delivered throughput tracks tenant
+    weights (1:4 within 20%) and the report's Jain index over
+    weight-normalized shares is high;
+  * a tenant with an expiring deadline is promoted past heavier
+    tenants (``promotions`` observable in the report);
+  * observability rides the shared obs subsystem: tenant-labelled
+    counters, one ``tenant:<name>`` trace track per tenant, and a
+    :class:`FrontEndReport` that JSON round-trips to equality.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import compiler
+from repro.compiler import TPU_INTERPRET
+from repro.configs.cnn import (mini_mobilenet, mini_resnet18,
+                               mini_resnet50)
+from repro.models.cnn import cnn_input_shape, init_cnn_params
+from repro.obs import Tracer, validate_chrome_trace
+from repro.runtime.frontend import (FrontEndReport, MultiTenantFrontEnd,
+                                    TenantSpec)
+
+CFGS = {
+    "mini_resnet18": mini_resnet18(hw=8, width=16, stages=4),
+    "mini_resnet50": mini_resnet50(hw=8, width=16, stages=4),
+    "mini_mobilenet": mini_mobilenet(hw=8, width=16, blocks=4),
+}
+
+
+@pytest.fixture(scope="module")
+def nets():
+    """network name -> (compiled pipeline, params)."""
+    out = {}
+    for i, (name, cfg) in enumerate(CFGS.items()):
+        cp = compiler.compile(cfg, TPU_INTERPRET)
+        out[name] = (cp, init_cnn_params(jax.random.PRNGKey(i), cfg))
+    return out
+
+
+def _requests(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = cnn_input_shape(cfg, 1)[1:]
+    return [rng.integers(-127, 128, size=(n,) + shape,
+                         dtype=np.int16).astype(np.int8) for n in sizes]
+
+
+def _reference_rows(cp, params, batches):
+    big = np.concatenate(batches, axis=0)
+    ref = np.asarray(cp.run(params, big)[0])
+    out, off = [], 0
+    for b in batches:
+        out.append(ref[off:off + len(b)])
+        off += len(b)
+    return out
+
+
+def _front_end(nets, **kw):
+    engines = {name: cp.serve(params, microbatch=4, credits=2,
+                              queue_depth=4)
+               for name, (cp, params) in nets.items()}
+    return MultiTenantFrontEnd(engines, **kw)
+
+
+def test_three_network_traffic_bit_identical(nets):
+    """Closed-loop serve() AND open-loop submit/collect across all
+    three networks at once: every request's logits equal the sequential
+    run() reference for its own network."""
+    fe = _front_end(nets, max_outstanding=6)
+    per_net = {}
+    for i, name in enumerate(nets):
+        per_net[name] = _requests(CFGS[name], [1, 3, 2, 5], seed=100 + i)
+    fe.register_tenant("a18", network="mini_resnet18", weight=1.0)
+    fe.register_tenant("a50", network="mini_resnet50", weight=2.0)
+    fe.register_tenant("amb", network="mini_mobilenet", weight=1.0)
+    tenant_of = {"mini_resnet18": "a18", "mini_resnet50": "a50",
+                 "mini_mobilenet": "amb"}
+    with fe:
+        # closed loop: first two batches of each net through serve()
+        closed = [(tenant_of[n], b) for n in per_net
+                  for b in per_net[n][:2]]
+        closed_out, _ = fe.serve(closed)
+        # open loop: remaining batches submitted interleaved, results
+        # collected after the fact
+        open_reqs = [(n, fe.submit(tenant_of[n], b))
+                     for i in (2, 3) for n in per_net
+                     for b in [per_net[n][i]]]
+        fe.drain()
+        rep = fe.report()
+    # closed-loop identity
+    want = {n: _reference_rows(*nets[n], per_net[n]) for n in per_net}
+    idx = 0
+    for n in per_net:
+        for i in range(2):
+            assert np.array_equal(closed_out[idx], want[n][i])
+            idx += 1
+    # open-loop identity
+    seen = {n: 2 for n in per_net}
+    for n, req in open_reqs:
+        assert np.array_equal(req.result(), want[n][seen[n]])
+        seen[n] += 1
+    assert rep.requests == 12
+    assert rep.images == sum(sum(len(b) for b in bs)
+                             for bs in per_net.values())
+    assert rep.networks == tuple(sorted(nets))
+    assert {r["tenant"] for r in rep.tenant_rows} == {"a18", "a50", "amb"}
+
+
+def test_concurrent_producers_hold_admission_invariants(nets):
+    """N producer threads x 3 tenants on one shared front door: the
+    global max_outstanding bound holds through the controller's
+    invariant hooks, every engine's own credit bound stays quiescent,
+    and nothing is lost or corrupted."""
+    name = "mini_resnet18"
+    cp, params = nets[name]
+    fe = MultiTenantFrontEnd(
+        {name: cp.serve(params, microbatch=4, credits=2, queue_depth=2)},
+        max_outstanding=3)
+    tenants = ["t0", "t1", "t2"]
+    for t in tenants:
+        fe.register_tenant(t, network=name, weight=1.0)
+    batches = {t: _requests(CFGS[name], [1, 2, 1, 3], seed=i)
+               for i, t in enumerate(tenants)}
+    got = {}
+    errors = []
+
+    def producer(t):
+        try:
+            got[t] = [fe.submit(t, b) for b in batches[t]]
+        except BaseException as exc:          # pragma: no cover
+            errors.append(exc)
+
+    with fe:
+        threads = [threading.Thread(target=producer, args=(t,))
+                   for t in tenants]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errors
+        fe.drain()
+    ctl = fe.admission
+    assert ctl.max_in_flight_seen <= 3        # the global bound HELD
+    assert ctl.admitted_total == ctl.completed_total == 12
+    ctl.assert_quiescent()
+    eng = fe._lanes[name].engine
+    assert eng.admission.max_in_flight_seen <= 2
+    eng.admission.assert_quiescent()
+    for t in tenants:
+        for req, want in zip(got[t],
+                             _reference_rows(cp, params, batches[t])):
+            assert np.array_equal(req.result(), want)
+
+
+def test_weighted_shares_track_weights_under_backlog(nets):
+    """1:4 weights on one network under sustained backlog: the DRR
+    tier's delivered split tracks the weights within 20%, visible in a
+    mid-run report snapshot (the drained end-state always converges to
+    the submitted ratio and proves nothing)."""
+    name = "mini_resnet18"
+    cp, params = nets[name]
+    fe = MultiTenantFrontEnd(
+        {name: cp.serve(params, microbatch=1, credits=1, queue_depth=1)},
+        max_outstanding=1)                    # serialize: backlog pools here
+    fe.register_tenant("light", network=name, weight=1.0)
+    fe.register_tenant("heavy", network=name, weight=4.0)
+    n_each = 30
+    batches = _requests(CFGS[name], [1] * n_each, seed=0)
+    with fe:
+        for b in batches:                     # enqueue far faster than service
+            fe.submit("light", b)
+            fe.submit("heavy", b)
+        # mid-run: wait for a window past scheduler warm-up, snapshot
+        while True:
+            rep = fe.report()
+            done = {r["tenant"]: r["images"] for r in rep.tenant_rows}
+            if sum(done.values()) >= 25:
+                break
+            time.sleep(0.01)
+        fe.drain()
+        final = fe.report()
+    ratio = done["heavy"] / max(1, done["light"])
+    assert 4.0 * 0.8 <= ratio <= 4.0 * 1.2, (done, ratio)
+    assert rep.fairness >= 0.95               # weight-normalized Jain
+    # the drained end state delivered everything for both tenants
+    rows = {r["tenant"]: r for r in final.tenant_rows}
+    assert rows["light"]["images"] == rows["heavy"]["images"] == n_each
+    # scheduler evidence rode into the report rows
+    assert rows["heavy"]["picks"] + rows["light"]["picks"] == 2 * n_each
+    assert rows["heavy"]["served_cost"] == pytest.approx(n_each)
+
+
+def test_deadline_promotion_jumps_the_line(nets):
+    """An overdue tenant is served out of DRR order: with an (already
+    expiring) deadline against a weight-8 competitor, its requests are
+    promoted — observable as report.promotions — and every deadline
+    miss is counted per tenant."""
+    name = "mini_mobilenet"
+    cp, params = nets[name]
+    fe = MultiTenantFrontEnd(
+        {name: cp.serve(params, microbatch=1, credits=1, queue_depth=1)},
+        max_outstanding=1)
+    fe.register_tenant("bulk", network=name, weight=8.0)
+    # 0 ms of slack: overdue the moment the scheduler looks at it
+    fe.register_tenant("rt", network=name, weight=1.0, deadline_ms=0.0)
+    batches = _requests(CFGS[name], [1] * 10, seed=1)
+    with fe:
+        for b in batches:
+            fe.submit("bulk", b)
+            fe.submit("rt", b)
+        fe.drain()
+        rep = fe.report()
+    rows = {r["tenant"]: r for r in rep.tenant_rows}
+    assert rep.promotions > 0
+    assert rows["rt"]["deadline_misses"] > 0       # 0ms is unmeetable
+    assert rows["rt"]["deadline_miss_rate"] == \
+        rows["rt"]["deadline_misses"] / rows["rt"]["requests"]
+    assert rows["bulk"]["deadline_misses"] == 0    # no deadline, no miss
+    assert rows["bulk"]["deadline_miss_rate"] == 0.0
+
+
+def test_tenant_labelled_obs_and_trace_tracks(nets):
+    """Per-tenant observability: labelled counters on the front-end
+    registry and one ``tenant:<name>`` async track per tenant in the
+    exported Chrome trace."""
+    name = "mini_resnet18"
+    cp, params = nets[name]
+    tr = Tracer()
+    fe = MultiTenantFrontEnd(
+        {name: cp.serve(params, microbatch=4, credits=2)}, tracer=tr)
+    fe.register_tenant("alice", network=name, weight=1.0)
+    fe.register_tenant("bob", network=name, weight=1.0)
+    with fe:
+        _, rep = fe.serve([("alice", b) for b in
+                           _requests(CFGS[name], [1, 2], seed=3)]
+                          + [("bob", b) for b in
+                             _requests(CFGS[name], [3], seed=4)])
+    c = rep.metrics["counters"]
+    assert c["frontend_requests_submitted{tenant=alice}"] == 2
+    assert c["frontend_requests_submitted{tenant=bob}"] == 1
+    assert c["frontend_images_delivered{tenant=alice}"] == 3
+    assert c["frontend_images_delivered{tenant=bob}"] == 3
+    trace = tr.to_chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    # one tid row per tenant (the Tracer admits new tracks on first use)
+    tracks = {e["args"]["name"] for e in trace["traceEvents"]
+              if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert {"tenant:alice", "tenant:bob"} <= tracks
+    # each request's async span opened AND closed
+    begins = [e for e in trace["traceEvents"] if e["ph"] == "b"]
+    ends = [e for e in trace["traceEvents"] if e["ph"] == "e"]
+    assert len(begins) == len(ends) == 3
+
+
+def test_report_round_trip_and_table(nets):
+    name = "mini_mobilenet"
+    cp, params = nets[name]
+    fe = MultiTenantFrontEnd(
+        {name: cp.serve(params, microbatch=4, credits=2)})
+    fe.register_tenant("solo", network=name, weight=2.0,
+                       deadline_ms=1e6)
+    with fe:
+        _, rep = fe.serve([("solo", b) for b in
+                           _requests(CFGS[name], [2, 1], seed=5)])
+    back = FrontEndReport.from_json(rep.to_json())
+    assert back == rep
+    assert isinstance(back.networks, tuple)
+    assert isinstance(back.tenant_rows, tuple)
+    assert FrontEndReport.from_json(rep.to_dict()) == rep
+    text = rep.table()
+    assert "fairness(Jain)" in text and "solo" in text
+    assert "deadline promotions" in text
+
+
+def test_validation_and_lifecycle(nets):
+    name = "mini_resnet18"
+    cp, params = nets[name]
+    eng = cp.serve(params, microbatch=2, credits=2)
+    with pytest.raises(ValueError, match="at least one"):
+        MultiTenantFrontEnd({})
+    fe = MultiTenantFrontEnd({name: eng})
+    with pytest.raises(ValueError, match="unknown network"):
+        fe.register_tenant("x", network="nope")
+    fe.register_tenant("x", network=name)
+    with pytest.raises(ValueError, match="already"):
+        fe.register_tenant("x", network=name)
+    spec = fe.tenants["x"]
+    assert spec == TenantSpec("x", name, 1.0, None)
+    img = _requests(CFGS[name], [1], seed=6)[0]
+    with pytest.raises(RuntimeError, match="not started"):
+        fe.submit("x", img)
+    with fe:
+        with pytest.raises(ValueError, match="unknown tenant"):
+            fe.submit("ghost", img)
+        req = fe.submit("x", img)
+        assert req.result(timeout=60).shape[0] == 1
+        assert req.latency_s > 0
+    # single-use, like the engines it owns
+    with pytest.raises(RuntimeError, match="single-use"):
+        fe.start()

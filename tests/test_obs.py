@@ -225,6 +225,45 @@ class TestStallAttribution:
                                 dispatch_gap_s=1.0)
         assert out["measured"]["admission_wait_fraction"] == 0.0
 
+    class _Outcome:
+        """Duck-typed fifo_sim.SimOutcome for the modelled section."""
+
+        def __init__(self, per_layer_weight_words):
+            self.cycles = 100
+            self.stall_cycles = 10
+            self.outputs = 4
+            self.completed = True
+            self.per_layer_weight_words = per_layer_weight_words
+
+    def test_name_count_mismatch_raises(self):
+        """Regression pin: ``dict(zip(names, words))`` silently
+        TRUNCATED on a length mismatch, attributing words to the wrong
+        engines when the streamed set and sim topology drifted apart.
+        Now it hard-fails, both directions."""
+        out = self._Outcome([10, 20, 30])
+        with pytest.raises(ValueError, match="2 engine name"):
+            stall_attribution(wall_s=1.0, admission_wait_s=0.0,
+                              dispatch_gap_s=0.0, modelled=out,
+                              engine_names=("a", "b"))
+        with pytest.raises(ValueError, match="4 engine name"):
+            stall_attribution(wall_s=1.0, admission_wait_s=0.0,
+                              dispatch_gap_s=0.0, modelled=out,
+                              engine_names=("a", "b", "c", "d"))
+
+    def test_duplicate_engine_names_survive_in_rows(self):
+        """Regression pin: duplicate engine names (two streamed layers
+        sharing a spec name) collapsed in the dict view, losing a row's
+        words.  The rows view preserves order AND duplicates; the dict
+        stays as the documented lossy compat view (last row wins)."""
+        out = self._Outcome([10, 20, 30])
+        got = stall_attribution(wall_s=1.0, admission_wait_s=0.0,
+                                dispatch_gap_s=0.0, modelled=out,
+                                engine_names=("conv", "conv", "fc"))
+        mo = got["modelled"]
+        assert mo["per_engine_weight_word_rows"] == [
+            ["conv", 10], ["conv", 20], ["fc", 30]]
+        assert mo["per_engine_weight_words"] == {"conv": 20, "fc": 30}
+
 
 # ---------------------------------------------------------------------------
 # admission controller wait accounting (fake clock, no sleeps)

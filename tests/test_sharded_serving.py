@@ -166,3 +166,24 @@ def test_sharded_serving_4stage_mesh():
                            os.path.abspath(__file__))), timeout=540)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
+
+
+def test_sharded_report_round_trip(setup):
+    """``ShardedServingReport.from_json`` restores the tuple-typed
+    staged fields (per-stage words, per-shard request counts) from
+    JSON's lists — to EQUALITY, via the shared recursive restore law
+    (``restore_tuple_fields``)."""
+    from repro.runtime.sharded_serving import ShardedServingReport
+    cp, params = setup
+    mesh = compat_make_mesh((1,), ("model",))
+    with cp.serve_sharded(params, mesh=mesh, microbatch=2,
+                          round_microbatches=2) as eng:
+        _, rep = eng.serve(_requests([1, 3, 2], seed=9))
+    assert rep.stage_hbm_words_per_image and rep.shard_requests
+    back = ShardedServingReport.from_json(rep.to_json())
+    assert back == rep
+    assert isinstance(back.stage_hbm_words_per_image, tuple)
+    assert isinstance(back.shard_requests, tuple)
+    # dict payloads (already-parsed artifacts) restore identically, and
+    # the derived keys to_dict() adds never break construction
+    assert ShardedServingReport.from_json(rep.to_dict()) == rep
